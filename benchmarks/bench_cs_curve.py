@@ -1,0 +1,85 @@
+"""Paper Fig. 2: the CS curve vs. actual split accuracy.
+
+For the trained VGG: compute the CS curve over the feature ops, then for
+every legal cut train a 50%-compression bottleneck (Eq. 3 recipe) and
+measure test accuracy of the split model.  The paper's claim: CS local
+maxima mark the cuts where accuracy is preserved — we report the curve,
+the per-cut accuracies and their Pearson correlation.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bottleneck as B
+from repro.core.saliency import candidate_split_points, cumulative_saliency
+from repro.data.synthetic import toy_image_iter, toy_images
+from repro.models.vgg import feature_index
+
+from .common import RESULTS_DIR, trained_vgg, vgg_test_accuracy
+
+
+def split_accuracy(model, params, cut: int, ae_steps: int = 400) -> float:
+    # paper recipe is 50 epochs @ lr 5e-4 on CIFAR10; at toy scale the
+    # equivalent total work is ~400 Adam steps @ 2e-3 (validated: recovers
+    # base accuracy at good cuts)
+    it = map(lambda t: (jnp.asarray(t[0]), jnp.asarray(t[1])),
+             toy_image_iter(32, hw=16, seed=100 + cut))
+    ae, _ = B.train_bottleneck(model, params, cut, it, steps=ae_steps, lr=2e-3)
+    xs, ys = toy_images(256, hw=16, seed=777)
+    fwd = jax.jit(lambda xb: B.split_forward(model, params, ae, cut, xb))
+    preds = np.asarray(fwd(jnp.asarray(xs))).argmax(-1)
+    return float((preds == ys).mean())
+
+
+def run(fast: bool = False):
+    model, params = trained_vgg()
+    base_acc = vgg_test_accuracy(model, params)
+    xs, ys = toy_images(64, hw=16, seed=55)
+    fi = feature_index(model)
+    cs = cumulative_saliency(model, params, jnp.asarray(xs), jnp.asarray(ys),
+                             layer_idx=fi)
+    cands = candidate_split_points(model, cs, fi, top_n=5)
+    cuts = fi[1::2] if fast else fi
+    cuts = [c for c in cuts if c in set(model.cut_points())]
+    accs = {c: split_accuracy(model, params, c, ae_steps=150 if fast else 400)
+            for c in cuts}
+    cs_at = {c: float(cs[fi.index(c)]) for c in cuts}
+    pairs = [(cs_at[c], accs[c]) for c in cuts]
+    corr = float(np.corrcoef([p[0] for p in pairs], [p[1] for p in pairs])[0, 1])
+    cand_accs = [accs[c] for c in cands if c in accs]
+    noncand_accs = [accs[c] for c in cuts if c not in set(cands)]
+    out = {
+        "base_accuracy": base_acc,
+        "cs_curve": {int(l): float(v) for l, v in zip(fi, cs)},
+        "candidates": [int(c) for c in cands],
+        "split_accuracy": {int(k): v for k, v in accs.items()},
+        "pearson_cs_vs_accuracy": corr,
+        "candidate_acc_mean": float(np.mean(cand_accs)) if cand_accs else None,
+        "noncandidate_acc_min": float(np.min(noncand_accs)) if noncand_accs else None,
+    }
+    os.makedirs(os.path.join(RESULTS_DIR, "paper"), exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, "paper", "fig2_cs_curve.json"), "w") as f:
+        json.dump(out, f, indent=1)
+    rows = [("fig2.base_accuracy", 0.0, base_acc),
+            ("fig2.pearson_cs_vs_acc", 0.0, corr),
+            ("fig2.n_candidates", 0.0, len(cands))]
+    if cand_accs:
+        # the paper's claim: CS peaks mark accuracy-preserving cuts
+        rows.append(("fig2.candidate_acc_mean", 0.0, float(np.mean(cand_accs))))
+        rows.append(("fig2.candidate_acc_drop_vs_base", 0.0,
+                     round(base_acc - float(np.mean(cand_accs)), 4)))
+    if noncand_accs:
+        rows.append(("fig2.noncandidate_acc_min", 0.0, float(np.min(noncand_accs))))
+    for c in cuts:
+        rows.append((f"fig2.split@{c}.acc", 0.0, accs[c]))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

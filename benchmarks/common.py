@@ -1,0 +1,65 @@
+"""Shared benchmark helpers: a trained small VGG on the toy-conveyor task."""
+from __future__ import annotations
+
+import functools
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def timed(fn, *args, iters: int = 5, warmup: int = 1):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6, out  # us/call
+
+
+@functools.lru_cache(maxsize=1)
+def trained_vgg(steps: int = 300, hw: int = 16, batch: int = 32, lr: float = 5e-3):
+    """Train the reduced VGG on the procedural toy task (paper §V recipe:
+    Adam, lr 5e-3).  Cached via checkpoint so benches share one model."""
+    from repro.data.synthetic import toy_image_iter, toy_images
+    from repro.models.vgg import vgg_cifar
+    from repro.training.checkpoint import restore, save
+    from repro.training.optimizer import adam_init, adam_update
+
+    model = vgg_cifar(n_classes=8, input_hw=hw, width_mult=0.5)
+    params = model.init(jax.random.PRNGKey(0))
+    path = os.path.join(RESULTS_DIR, f"vgg_toy_{hw}_{steps}.npz")
+    if os.path.exists(path):
+        return model, restore(path, params)
+
+    opt = adam_init(params)
+
+    @jax.jit
+    def step(params, opt, x, y):
+        def lf(p):
+            logits = model.apply(p, x)
+            lse = jax.nn.logsumexp(logits, -1)
+            gold = jnp.take_along_axis(logits, y[:, None], 1)[:, 0]
+            return jnp.mean(lse - gold)
+        loss, g = jax.value_and_grad(lf)(params)
+        params, opt = adam_update(params, g, opt, lr)
+        return params, opt, loss
+
+    it = toy_image_iter(batch, hw=hw, seed=0)
+    for i in range(steps):
+        xs, ys = next(it)
+        params, opt, loss = step(params, opt, jnp.asarray(xs), jnp.asarray(ys))
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    save(path, params)
+    return model, params
+
+
+def vgg_test_accuracy(model, params, n: int = 256, hw: int = 16) -> float:
+    from repro.data.synthetic import toy_images
+    xs, ys = toy_images(n, hw=hw, seed=777)
+    logits = model.apply(params, jnp.asarray(xs))
+    return float((np.asarray(logits).argmax(-1) == ys).mean())

@@ -1,0 +1,59 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""§Perf hillclimbs 1-2 driver: re-lowers the selected (arch x shape)
+pairs with the optimisation flags on, into ``results/dryrun_opt``, and
+prints before/after roofline terms against the baselines in
+``results/dryrun``.
+
+  PYTHONPATH=src python -m benchmarks.perf_compare [--pairs a:b,c:d]
+"""
+import argparse
+import json
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+DEFAULT_PAIRS = [
+    ("llama3.2-3b", "prefill_32k"),   # worst useful-ratio (24 heads % 16)
+    ("jamba-v0.1-52b", "decode_32k"), # most collective-bound
+    ("qwen3-moe-235b-a22b", "train_4k"),  # compute-bound MoE giant
+]
+
+
+def main():
+    from repro.launch.dryrun import run_case
+    from benchmarks.roofline import analyse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pairs", default=None,
+                    help="comma list of arch:shape (default: the 3 picks)")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    pairs = (DEFAULT_PAIRS if not args.pairs else
+             [tuple(p.split(":")) for p in args.pairs.split(",")])
+
+    print(f"{'pair':45s} {'variant':9s} {'compute_s':>10s} {'memory_s':>10s} "
+          f"{'collect_s':>10s} {'dominant':>10s} {'useful':>7s} {'peakGiB':>8s}")
+    for arch, shape in pairs:
+        base_path = f"results/dryrun/pod16x16/{arch}__{shape}.json"
+        with open(base_path) as f:
+            base = analyse(json.load(f))
+        opt_rec = run_case(arch, shape, multi_pod=False,
+                           outdir="results/dryrun_opt", force=args.force,
+                           optimized=True)
+        opt = analyse(opt_rec)
+        for tag, r in (("baseline", base), ("optimized", opt)):
+            print(f"{arch + ' x ' + shape:45s} {tag:9s} {r['compute_s']:10.3e} "
+                  f"{r['memory_s']:10.3e} {r['collective_s']:10.3e} "
+                  f"{r['dominant']:>10s} {r['useful_ratio']:7.2f} "
+                  f"{r['peak_mem_GiB']:8.1f}")
+        dom = base["dominant"] + "_s"
+        if opt[dom] > 0:
+            print(f"{'':45s} -> dominant term ({base['dominant']}) "
+                  f"{base[dom]:.3e} -> {opt[dom]:.3e} "
+                  f"({base[dom] / opt[dom]:.2f}x)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+"""Split-Et-Impera in JAX.
+
+Public API entry points:
+
+    from repro.configs import get_config
+    from repro.core import saliency, split, bottleneck, qos
+    from repro.netsim.simulator import ApplicationSimulator, NetworkConfig
+    from repro.models import transformer
+    from repro.launch.mesh import make_production_mesh
+"""
+
+__version__ = "0.1.0"

@@ -1,0 +1,28 @@
+"""Config registry: ``get_config("<arch-id>")`` for the 10 assigned archs."""
+from __future__ import annotations
+
+import importlib
+
+ARCHS = {
+    "llama3.2-3b": "llama3_2_3b",
+    "command-r-35b": "command_r_35b",
+    "internvl2-76b": "internvl2_76b",
+    "deepseek-moe-16b": "deepseek_moe_16b",
+    "whisper-tiny": "whisper_tiny",
+    "rwkv6-1.6b": "rwkv6_1_6b",
+    "jamba-v0.1-52b": "jamba_v0_1_52b",
+    "qwen2-72b": "qwen2_72b",
+    "qwen3-moe-235b-a22b": "qwen3_moe_235b_a22b",
+    "llama3-8b": "llama3_8b",
+}
+
+
+def get_config(name: str):
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(ARCHS)}")
+    mod = importlib.import_module(f"repro.configs.{ARCHS[name]}")
+    return mod.CONFIG
+
+
+def all_configs() -> dict:
+    return {name: get_config(name) for name in ARCHS}

@@ -1,0 +1,10 @@
+"""The paper's own model: VGG16 (+ reduced CPU-trainable variant).
+
+Not a transformer config — exposes the LayeredModel builders used by the
+Split-Et-Impera core experiments (Figs. 2-4, Tables I-II).
+"""
+from repro.models.vgg import build_vgg, vgg16, vgg_cifar  # noqa: F401
+
+# Paper training hyperparameters (§V)
+TRAIN = dict(epochs=20, lr=5e-3, optimizer="adam")
+BOTTLENECK_TRAIN = dict(epochs=50, lr=5e-4, optimizer="adam", compression=0.5)

@@ -1,0 +1,3 @@
+"""The paper's contribution: saliency-driven split-point selection,
+head/bottleneck/tail partitioning, QoS matching, model statistics."""
+from . import bottleneck, qos, saliency, scenarios, split, stats  # noqa: F401

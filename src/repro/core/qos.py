@@ -1,0 +1,71 @@
+"""QoS matching: rank candidate configurations, suggest the best design
+(paper §IV outputs i and ii).
+
+Output i  — *suggested configurations*: SC candidates ranked by the CS value
+            at their split point (the paper's accuracy proxy), plus LC/RC.
+Output ii — *simulation verdicts*: after `repro.netsim` simulates the chosen
+            subset, pick the best design meeting the application
+            constraints (e.g. 20 FPS conveyor belt + accuracy floor).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional, Sequence
+
+
+@dataclass(frozen=True)
+class QoSRequirements:
+    max_latency_s: float            # e.g. 0.05 (20 FPS conveyor belt, §V-B)
+    min_accuracy: float = 0.0
+
+
+@dataclass
+class Candidate:
+    label: str                      # 'LC' | 'RC' | 'SC@<layer>'
+    split_layer: Optional[int] = None
+    accuracy_proxy: float = 0.0     # CS value at the cut (ranking key)
+
+
+@dataclass
+class SimVerdict:
+    candidate: Candidate
+    latency_s: float
+    accuracy: float
+    meta: dict = field(default_factory=dict)
+
+    def satisfies(self, qos: QoSRequirements) -> bool:
+        return (self.latency_s <= qos.max_latency_s
+                and self.accuracy >= qos.min_accuracy)
+
+
+def rank_candidates(cs_curve, layer_idx: Sequence[int],
+                    split_points: Sequence[int],
+                    include_lc_rc: bool = True) -> list:
+    """Output i: candidates ordered by presumed accuracy (CS at the cut)."""
+    li = list(layer_idx)
+    cands = [Candidate(f"SC@{sp}", sp, float(cs_curve[li.index(sp)]))
+             for sp in split_points]
+    cands.sort(key=lambda c: -c.accuracy_proxy)
+    if include_lc_rc:
+        # RC preserves full accuracy (proxy 1.0 by definition); LC runs the
+        # lightweight local model (proxy below any SC cut).
+        cands = [Candidate("RC", None, 1.0)] + cands + [Candidate("LC", None, 0.0)]
+    return cands
+
+
+def suggest(verdicts: Sequence[SimVerdict], qos: QoSRequirements) -> Optional[SimVerdict]:
+    """Output ii: best feasible design — max accuracy, then min latency."""
+    ok = [v for v in verdicts if v.satisfies(qos)]
+    if not ok:
+        return None
+    return max(ok, key=lambda v: (v.accuracy, -v.latency_s))
+
+
+def pareto(verdicts: Sequence[SimVerdict]) -> list:
+    """Accuracy/latency Pareto frontier over simulated designs."""
+    front = []
+    for v in verdicts:
+        if not any(o.accuracy >= v.accuracy and o.latency_s <= v.latency_s
+                   and o is not v for o in verdicts):
+            front.append(v)
+    return sorted(front, key=lambda v: v.latency_s)

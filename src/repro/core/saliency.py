@@ -1,0 +1,133 @@
+"""Saliency-based split-point search (paper §III).
+
+Generalized Grad-CAM over a :class:`LayeredModel`:
+
+  1. one forward pass capturing every layer activation F^i,
+  2. one backward pass (the *tap* trick: taps[i] added to each activation,
+     vjp w.r.t. zero taps) yielding dy_c/dF^i for every layer at once,
+  3. per layer: alpha_ch = mean_spatial(dy_c/dF_ch)   (Eq. 1; "spatial" =
+     all non-batch, non-channel dims, so 1-D signals work — claim ii),
+     m_i = sum_ch alpha_ch * F_ch, resized to a common grid,
+  4. cumulative map  M_i = ReLU(sum_{k>=i} m_k)  (Eq. 2),
+     per-layer scalar CS_i = mean_batch sum(M_i),
+  5. average over inputs of all classes, normalise -> the CS curve.
+
+Candidate split points = plateau-tolerant local maxima of CS restricted to
+legal cut points.  See DESIGN.md §7 for the formula interpretation.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layered import LayeredModel
+
+
+def _spatial_axes(shape) -> tuple:
+    """Axes between batch (0) and channel (-1)."""
+    return tuple(range(1, len(shape) - 1))
+
+
+def _weighted_map(act: jax.Array, grad: jax.Array) -> jax.Array:
+    """alpha-weighted, channel-summed map m_i: (B, *spatial) (spatial may be ())."""
+    sp = _spatial_axes(act.shape)
+    alpha = grad.mean(axis=sp) if sp else grad          # (B, C)
+    alpha = alpha.reshape(alpha.shape[0], *([1] * len(sp)), alpha.shape[-1])
+    return (alpha * act).sum(axis=-1)                   # (B, *spatial)
+
+
+def _resize_to(m: jax.Array, target_spatial: tuple) -> jax.Array:
+    """Resize (B, *spatial) map to (B, *target_spatial); scalars broadcast."""
+    b = m.shape[0]
+    if m.ndim == 1:                                      # no spatial dims
+        return jnp.broadcast_to(m.reshape((b,) + (1,) * len(target_spatial)),
+                                (b,) + target_spatial)
+    if m.shape[1:] == target_spatial:
+        return m
+    return jax.image.resize(m, (b,) + target_spatial, method="bilinear")
+
+
+def layer_saliency_maps(model: LayeredModel, params, x: jax.Array,
+                        labels: jax.Array) -> list:
+    """Per-layer alpha-weighted maps m_i resized to a common grid.
+
+    Works on raw arrays or on model-specific input pytrees (the first
+    layer of transformer LayeredModels consumes a batch dict).
+    """
+    zero_taps = None
+
+    def fwd(taps):
+        return model.apply_with_taps(params, x, taps)
+
+    # build zero taps with the right shapes via a capture pass
+    logits, acts = model.apply_capture(params, x)
+    zero_taps = [jnp.zeros_like(a) for a in acts]
+    logits, vjp = jax.vjp(fwd, zero_taps)
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=logits.dtype)
+    (grads,) = vjp(onehot)
+
+    # common grid = spatial shape of the largest feature map
+    spatial_shapes = [a.shape[1:-1] for a in acts]
+    ranked = sorted((s for s in spatial_shapes if s), key=np.prod, reverse=True)
+    target = ranked[0] if ranked else ()
+    maps = []
+    for a, g in zip(acts, grads):
+        m = _weighted_map(a.astype(jnp.float32), g.astype(jnp.float32))
+        maps.append(_resize_to(m, tuple(target)) if target else m)
+    return maps
+
+
+def cumulative_saliency(model: LayeredModel, params, x: jax.Array,
+                        labels: jax.Array,
+                        layer_idx: Optional[Sequence[int]] = None) -> np.ndarray:
+    """The CS curve over ``layer_idx`` (default: all layers)."""
+    maps = layer_saliency_maps(model, params, x, labels)
+    if layer_idx is not None:
+        maps = [maps[i] for i in layer_idx]
+    stack = jnp.stack(maps)                              # (L, B, *spatial)
+    # cumulative from the back: M_i = sum_{k>=i} m_k
+    cum = jnp.flip(jnp.cumsum(jnp.flip(stack, 0), axis=0), 0)
+    cs = jax.nn.relu(cum).sum(axis=tuple(range(2, cum.ndim))).mean(axis=1)
+    cs = np.asarray(cs, np.float64)
+    rng = cs.max() - cs.min()
+    return (cs - cs.min()) / (rng if rng > 0 else 1.0)
+
+
+def batched_cs(model: LayeredModel, params, data_iter, n_batches: int,
+               layer_idx=None) -> np.ndarray:
+    """Average the CS curve over several batches (all classes into play)."""
+    acc = None
+    for _ in range(n_batches):
+        x, y = next(data_iter)
+        cs = cumulative_saliency(model, params, x, y, layer_idx)
+        acc = cs if acc is None else acc + cs
+    return acc / n_batches
+
+
+def local_maxima(curve: np.ndarray, *, tol: float = 1e-9) -> list:
+    """Plateau-tolerant local maxima indices (endpoints excluded)."""
+    peaks = []
+    n = len(curve)
+    i = 1
+    while i < n - 1:
+        j = i
+        while j + 1 < n and abs(curve[j + 1] - curve[j]) <= tol:
+            j += 1  # walk plateaus
+        if curve[i] > curve[i - 1] + tol and (j + 1 < n and curve[j] > curve[j + 1] + tol):
+            peaks.append((i + j) // 2)
+            i = j + 1
+        else:
+            i += 1
+    return peaks
+
+
+def candidate_split_points(model: LayeredModel, cs: np.ndarray,
+                           layer_idx: Sequence[int], top_n: int = 5) -> list:
+    """Local CS maxima mapped back to legal model cut points, best first."""
+    legal = set(model.cut_points())
+    peaks = [layer_idx[p] for p in local_maxima(cs) if layer_idx[p] in legal]
+    peaks.sort(key=lambda li: -cs[list(layer_idx).index(li)])
+    return peaks[:top_n]

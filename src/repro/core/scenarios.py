@@ -1,0 +1,102 @@
+"""Computation-platform models and the LC / RC / SC scenario definitions
+(paper §II-A).
+
+The paper's simulator composes three timing sources: computation on the
+edge device, computation on the server, and transmission.  This container
+has no TPU/GPU wall-clock, so compute latencies come from an analytic
+platform model (FLOPs / effective throughput) — recorded as a changed
+assumption in DESIGN.md §3.  Transmission timing comes from
+``repro.netsim`` (discrete-event TCP/UDP).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+
+from repro.core import stats as S
+from repro.core.split import SplitPlan, wire_payload_bytes
+
+
+@dataclass(frozen=True)
+class PlatformProfile:
+    """Effective (not peak) throughput of a compute platform."""
+    name: str
+    flops_per_s: float
+
+    def compute_time(self, flops: float) -> float:
+        return flops / self.flops_per_s
+
+
+# Representative profiles; effective throughput ~ 30-50% of peak.
+PLATFORMS = {
+    "mcu": PlatformProfile("mcu", 2e9),
+    "edge-embedded": PlatformProfile("edge-embedded", 0.5e12),   # Nano-class
+    "edge-accelerator": PlatformProfile("edge-accelerator", 5e12),  # Orin-class
+    "server-gpu": PlatformProfile("server-gpu", 60e12),
+    "tpu-v5e-chip": PlatformProfile("tpu-v5e-chip", 0.4 * 197e12),
+}
+
+
+class HILPlatform:
+    """Hardware-in-the-loop platform (paper §IV): instead of the analytic
+    FLOPs/throughput model, computation time is *measured* by executing the
+    (jitted) segment on the attached hardware — here the host CPU; on a
+    real deployment the same interface wraps the edge device.
+
+    ``compute_time(flops)`` falls back to the analytic model when no
+    measurement has been registered for that segment."""
+
+    def __init__(self, name: str, fallback_flops_per_s: float = 50e9):
+        self.name = name
+        self.flops_per_s = fallback_flops_per_s
+        self._measured = {}
+
+    def measure(self, key: str, fn, *args, iters: int = 3) -> float:
+        import time as _t
+        jax.block_until_ready(fn(*args))          # compile + warm
+        t0 = _t.perf_counter()
+        for _ in range(iters):
+            jax.block_until_ready(fn(*args))
+        dt = (_t.perf_counter() - t0) / iters
+        self._measured[key] = dt
+        return dt
+
+    def compute_time(self, flops: float, key: str = None) -> float:
+        if key is not None and key in self._measured:
+            return self._measured[key]
+        return flops / self.flops_per_s
+
+
+@dataclass(frozen=True)
+class Scenario:
+    """One design point: where does the computation run, what crosses the net."""
+    kind: str                      # 'LC' | 'RC' | 'SC'
+    split_plan: Optional[SplitPlan] = None   # SC only
+    edge: PlatformProfile = PLATFORMS["edge-embedded"]
+    server: PlatformProfile = PLATFORMS["server-gpu"]
+
+    def label(self) -> str:
+        if self.kind == "SC":
+            return f"SC@{self.split_plan.split_layer}"
+        return self.kind
+
+
+def scenario_times_and_payload(scenario: Scenario, model, params,
+                               input_bytes: int, batch: int = 1) -> dict:
+    """(edge_time, server_time, wire_bytes) for one inference frame."""
+    total_flops = sum(r.mult_adds for r in S.summary(model, params, batch)) * 2
+    if scenario.kind == "LC":
+        return {"edge_s": scenario.edge.compute_time(total_flops),
+                "server_s": 0.0, "wire_bytes": 0}
+    if scenario.kind == "RC":
+        return {"edge_s": 0.0,
+                "server_s": scenario.server.compute_time(total_flops),
+                "wire_bytes": input_bytes}
+    plan = scenario.split_plan
+    head_f, tail_f = S.flops_split(model, params, plan.split_layer, batch)
+    wire = wire_payload_bytes(model, params, plan, batch)
+    return {"edge_s": scenario.edge.compute_time(head_f),
+            "server_s": scenario.server.compute_time(tail_f),
+            "wire_bytes": wire}

@@ -1,0 +1,152 @@
+"""Model partitioning: head / bottleneck / tail (paper §III) and the TPU
+multi-pod adaptation (DESIGN.md §3).
+
+Two execution mappings of the same split:
+
+* **edge/server** (paper-faithful): `head_forward` on the sensing device,
+  payload over the simulated network (``repro.netsim``), `tail_forward` on
+  the server — see ``repro.core.bottleneck`` for the pieces.
+* **multi-pod pipeline** (TPU adaptation): the cut becomes a cross-pod
+  stage boundary; ``multipod_split_step`` runs a 2-stage microbatched
+  pipeline under ``shard_map`` where the inter-stage hop is a
+  ``lax.ppermute`` over the ``pod`` axis carrying the bottleneck-compressed
+  activation — the paper's head/AE/tail triple with the TCP channel
+  replaced by the pod-to-pod link.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.layered import LayeredModel
+from repro.models import transformer as T
+from repro.core import bottleneck as B
+
+
+@dataclass(frozen=True)
+class SplitPlan:
+    """A concrete SC design point."""
+    split_layer: int              # cut after this layer index
+    compression: float = 0.5      # bottleneck rate (paper: 50%)
+    wire_dtype_bytes: int = 4
+
+    def describe(self, model: LayeredModel) -> str:
+        return (f"head=[0..{self.split_layer}] "
+                f"bottleneck(rate={self.compression}) "
+                f"tail=[{self.split_layer + 1}..{len(model.layers) - 1}]")
+
+
+def legal_cuts(model: LayeredModel) -> list:
+    return model.cut_points()
+
+
+def wire_payload_bytes(model: LayeredModel, params, plan: SplitPlan,
+                       batch: int = 1) -> int:
+    shapes = model.activation_shapes(params, batch)
+    feat = shapes[plan.split_layer][1:]
+    return batch * B.payload_bytes(feat, plan.compression, plan.wire_dtype_bytes)
+
+
+# ------------------------------------------------ multi-pod pipeline step ----
+def _stack_stages(layer_params, n_groups: int, n_stages: int):
+    """(G, ...) group-stacked params -> (n_stages, G/n_stages, ...)."""
+    def re(x):
+        return x.reshape((n_stages, n_groups // n_stages) + x.shape[1:])
+    return jax.tree.map(re, layer_params)
+
+
+def multipod_split_step(params, cfg, batch: dict, mesh, *, ae: Optional[dict],
+                        n_micro: int = 4, shard_fn=None,
+                        quantize_wire: bool = False):
+    """2-stage pipelined forward across the ``pod`` mesh axis.
+
+    Uniform-stack architectures only (period-1 block structure).  The head
+    stage (pod 0) embeds + runs the first half of the blocks and *encodes*
+    the residual stream with the bottleneck AE; the compressed latent
+    crosses pods via ``ppermute``; the tail stage (pod 1) decodes and runs
+    the rest + LM head.  Microbatches keep both pods busy (GPipe-style,
+    bubble = 1/(n_micro+1)).
+
+    Returns per-token logits of the last microbatch wave (B, S, V) — enough
+    for validation; the training driver reduces a loss instead.
+    """
+    descs, n_groups = T.block_structure(cfg)
+    assert len(descs) == 1, "pipeline demo supports uniform stacks"
+    assert n_groups % 2 == 0
+    stages = _stack_stages(params["layers"], n_groups, 2)
+    tokens = batch["tokens"]
+    bsz, seq = tokens.shape
+    assert bsz % n_micro == 0
+    mb = bsz // n_micro
+
+    stage_spec = jax.tree.map(lambda _: P("pod"), stages)
+    out_spec = P(None, None, None)
+
+    def run_stage(stage_params, x):
+        positions = jnp.arange(x.shape[1])
+
+        def body(x, lp):
+            y, _, _ = T.apply_layer_seq(lp["l0"], descs[0], x, cfg, positions,
+                                        causal=True, window=cfg.sliding_window)
+            return y, None
+
+        x, _ = jax.lax.scan(body, x, stage_params)
+        return x
+
+    def pipeline(stages_local, tokens_all):
+        # stages_local: (1, G/2, ...) — this pod's stage
+        stage_id = jax.lax.axis_index("pod")
+        my_stage = jax.tree.map(lambda x: x[0], stages_local)
+        mbs = tokens_all.reshape(n_micro, mb, seq)
+        # one extra drain wave so the last microbatch clears the tail stage
+        mbs = jnp.concatenate([mbs, jnp.zeros((1, mb, seq), mbs.dtype)], 0)
+
+        def wave(carry, mb_tokens):
+            recv = carry  # latent arriving from the other pod (previous wave)
+            x0 = params["embed"][mb_tokens]                    # head input
+            if ae is None:
+                x1 = recv
+            elif quantize_wire:
+                x1 = B.decode_wire(ae, *recv)
+            else:
+                x1 = B.decode(ae, recv)
+            x = jnp.where(stage_id == 0, x0, x1.astype(x0.dtype))
+            y = run_stage(my_stage, x)
+            if ae is None:
+                wire = y
+            elif quantize_wire:  # int8 codes + per-token scales on the link
+                wire = B.encode_wire(ae, y.astype(jnp.float32))
+            else:
+                wire = B.encode(ae, y.astype(jnp.float32))
+            sent = jax.tree.map(
+                lambda t: jax.lax.ppermute(t, "pod", [(0, 1), (1, 0)]), wire)
+            return sent, y
+
+        latent_c = (B.latent_channels(cfg.d_model, 0.5) if ae is not None
+                    else cfg.d_model)
+        if ae is None:
+            init = jnp.zeros((mb, seq, latent_c), cfg.jdtype)
+        elif quantize_wire:
+            init = (jnp.zeros((mb, seq, latent_c), jnp.int8),
+                    jnp.ones((mb, seq, 1), jnp.float32))
+        else:
+            init = jnp.zeros((mb, seq, latent_c), jnp.float32)
+        _, ys = jax.lax.scan(wave, init, mbs)
+        # wave i's tail output (valid on pod 1) is microbatch i-1
+        tail_out = ys[1:]                                      # (n_micro, mb, S, D)
+        x = T._apply_norm(params["final_norm"], tail_out, cfg)
+        logits = T.logits_from_x(params, cfg, x)
+        logits = logits.reshape(bsz, seq, -1)
+        # pod 0 holds head garbage; zero it and share pod 1's result
+        valid = jnp.where(stage_id == 1, 1.0, 0.0).astype(logits.dtype)
+        return jax.lax.psum(logits * valid, "pod")
+
+    f = jax.shard_map(pipeline, mesh=mesh,
+                      in_specs=(stage_spec, P()), out_specs=out_spec,
+                      check_vma=False)
+    return f(stages, tokens)

@@ -1,0 +1,2 @@
+"""Pallas TPU kernels (validated in interpret mode on CPU) + jnp oracles."""
+from . import ops, ref                               # noqa: F401

@@ -1,0 +1,88 @@
+"""Pallas TPU kernel for the split-point wire compression (DESIGN.md §3).
+
+This is Split-Et-Impera's hot op: at the head/tail boundary the bottleneck
+encoder projects the activation to the undercomplete latent and the result
+is quantised to int8 for the wire (edge->server network, or the cross-pod
+``ppermute`` in the multi-pod mapping).  Fusing projection + ReLU +
+per-row amax + quantisation in one kernel means the f32 latent never
+round-trips through HBM — only the int8 payload and one scale per row
+leave VMEM.
+
+Grid: (n_tiles, c_tiles); the contraction over input channels C is the
+innermost ("arbitrary") dimension accumulating into a VMEM f32 scratch;
+the final contraction step applies ReLU, computes the row-wise amax and
+writes the int8 block.  Tiles are MXU-aligned (128).
+
+Validated against ``ref.bottleneck_compress_ref`` in interpret mode.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _compiler_params():
+    cp = getattr(pltpu, "CompilerParams", None) or getattr(pltpu, "TPUCompilerParams")
+    return cp(dimension_semantics=("parallel", "arbitrary"))
+
+
+def _kernel(f_ref, w_ref, b_ref, q_ref, s_ref, acc, *, nc: int, scale: float):
+    ic = pl.program_id(1)
+
+    @pl.when(ic == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+
+    f = f_ref[...].astype(jnp.float32)          # (bn, bc)
+    w = w_ref[...].astype(jnp.float32)          # (bc, L)
+    acc[...] += jax.lax.dot(f, w)
+
+    @pl.when(ic == nc - 1)
+    def _finish():
+        z = jax.nn.relu(acc[...] + b_ref[...].astype(jnp.float32))
+        amax = jnp.max(jnp.abs(z), axis=1, keepdims=True)
+        s = jnp.where(amax > 0, amax / scale, 1.0)
+        q_ref[...] = jnp.clip(jnp.round(z / s), -127, 127).astype(jnp.int8)
+        s_ref[...] = s.astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "bc", "interpret"))
+def bottleneck_compress(f: jax.Array, w: jax.Array, b: jax.Array, *,
+                        bn: int = 128, bc: int = 512,
+                        interpret: bool = False):
+    """f: (N, C) activations; w: (C, L); b: (L,).
+
+    Returns (q int8 (N, L), row scales f32 (N, 1)) — the wire payload.
+    """
+    n, c = f.shape
+    l = w.shape[1]
+    bn_, bc_ = min(bn, n), min(bc, c)
+    assert n % bn_ == 0 and c % bc_ == 0
+    nn, nc = n // bn_, c // bc_
+
+    kernel = functools.partial(_kernel, nc=nc, scale=127.0)
+    q, s = pl.pallas_call(
+        kernel,
+        grid=(nn, nc),
+        in_specs=[
+            pl.BlockSpec((bn_, bc_), lambda i, j: (i, j)),
+            pl.BlockSpec((bc_, l), lambda i, j: (j, 0)),
+            pl.BlockSpec((l,), lambda i, j: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bn_, l), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn_, 1), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, l), jnp.int8),
+            jax.ShapeDtypeStruct((n, 1), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((bn_, l), jnp.float32)],
+        compiler_params=_compiler_params(),
+        interpret=interpret,
+    )(f, w, b)
+    return q, s

@@ -1,0 +1,83 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True,
+                        window: Optional[int] = None) -> jax.Array:
+    """q: (B,Sq,H,D); k,v: (B,Sk,K,D) GQA. Plain softmax attention."""
+    b, sq, h, d = q.shape
+    sk, kh = k.shape[1], k.shape[2]
+    g = h // kh
+    k = jnp.repeat(k, g, axis=2)
+    v = jnp.repeat(v, g, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(d)
+    qp = jnp.arange(sq)[:, None] + (sk - sq)   # aligned last positions
+    kp = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= kp <= qp
+    if window is not None:
+        mask &= kp > qp - window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def bottleneck_compress_ref(f, w, b, *, scale: float = 127.0):
+    """Fused encoder projection + symmetric int8 wire quantisation.
+
+    f: (N, C) activations; w: (C, L); b: (L,).
+    Returns (q_int8 (N, L), per_row_scale (N, 1) f32).
+    """
+    z = jax.nn.relu(f.astype(jnp.float32) @ w.astype(jnp.float32)
+                    + b.astype(jnp.float32))
+    amax = jnp.max(jnp.abs(z), axis=-1, keepdims=True)
+    s = jnp.where(amax > 0, amax / scale, 1.0)
+    q = jnp.clip(jnp.round(z / s), -127, 127).astype(jnp.int8)
+    return q, s.astype(jnp.float32)
+
+
+def bottleneck_decompress_ref(q, s):
+    return q.astype(jnp.float32) * s
+
+
+def rwkv6_scan_ref(r, k, v, w, u, state):
+    """Sequential WKV-6 recurrence (B,S,H,D) f32; u (H,D); state (B,H,D,D).
+
+    out_t = r_t . (S + u*k_t v_t^T);  S <- diag(w_t) S + k_t v_t^T
+    """
+    def step(s, inp):
+        rt, kt, vt, wt = inp
+        kv = kt[..., :, None] * vt[..., None, :]
+        out = jnp.einsum("bhk,bhkv->bhv", rt, s + u[..., None] * kv)
+        s = wt[..., None] * s + kv
+        return s, out
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (r, k, v, w))
+    state, out = jax.lax.scan(step, state, xs)
+    return jnp.moveaxis(out, 0, 1), state
+
+
+def mamba_scan_ref(dt, b, c, x, a):
+    """Sequential selective scan (B,S,di)/(B,S,ds) f32 -> y (B,S,di)."""
+    bsz, s, di = dt.shape
+    ds = b.shape[-1]
+
+    def step(h, inp):
+        dt_t, b_t, c_t, x_t = inp
+        dA = jnp.exp(dt_t[..., None] * a)                    # (B,di,ds)
+        h = dA * h + (dt_t * x_t)[..., None] * b_t[:, None, :]
+        y = jnp.einsum("bds,bs->bd", h, c_t)
+        return h, y
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (dt, b, c, x))
+    h0 = jnp.zeros((bsz, di, ds), jnp.float32)
+    _, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1)

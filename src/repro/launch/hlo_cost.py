@@ -1,0 +1,339 @@
+"""Post-SPMD HLO cost analyzer with while-loop trip-count accounting.
+
+XLA's ``compiled.cost_analysis()`` on the host backend counts each while
+*body once* (verified empirically — a 10-iteration scan reports 1/10th of
+the unrolled FLOPs), which silently destroys the roofline for scanned-layer
+models.  This module re-derives per-device costs from ``compiled.as_text()``:
+
+  * builds the computation call graph (while/fusion/reduce/sort/...),
+  * multiplies every computation's cost by the product of enclosing while
+    trip counts (XLA annotates ``backend_config={"known_trip_count"...}``),
+  * FLOPs: dot ops = 2 * |result| * contracted extent (plus a small
+    elementwise allowance), convolutions approximated from kernel size,
+  * bytes: per top-level instruction, operands + result (fusion interiors
+    excluded — a reasonable HBM-traffic proxy, same convention XLA uses),
+  * collectives: op, buffer bytes, replica-group size and ring-model wire
+    bytes — each multiplied by loop multiplicity.
+"""
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import dataclass, field
+
+DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+               "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+               "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(r"^\s+(?:ROOT\s+)?%?([\w.\-]+)\s+=\s+(.*)$")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{\s*$")
+_CALLS_RE = re.compile(
+    r"(?:condition|body|calls|to_apply|select|scatter|update_computation)="
+    r"%?([\w.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_GRP_EXPL = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_GRP_IOTA = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = DTYPE_BYTES.get(dtype)
+    if n is None:
+        return 0
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+def _shape_elems(dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+@dataclass
+class Instr:
+    name: str
+    text: str           # full RHS text
+    op: str
+    result_dtype: str
+    result_dims: str
+    calls: list = field(default_factory=list)
+    trip: int = 1
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: list = field(default_factory=list)
+
+
+def parse_module(hlo: str) -> tuple:
+    """Returns (computations, entry_name, symtab name->(dtype, dims))."""
+    comps = {}
+    symtab = {}
+    entry = None
+    cur = None
+    for line in hlo.splitlines():
+        mc = _COMP_RE.match(line)
+        if mc and not line.startswith("  "):
+            cur = Computation(mc.group(1))
+            comps[cur.name] = cur
+            if line.startswith("ENTRY"):
+                entry = cur.name
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        mi = _INSTR_RE.match(line)
+        if not mi:
+            continue
+        name, rhs = mi.groups()
+        # result type is the first shape on the RHS (tuples: take op anyway)
+        ms = _SHAPE_RE.search(rhs)
+        rdtype, rdims = (ms.group(1), ms.group(2)) if ms else ("", "")
+        # op = first identifier immediately followed by '(' (dtypes/layouts
+        # never are)
+        mop = re.search(r"([a-z][\w\-]*)\(", rhs)
+        op = mop.group(1) if mop else "unknown"
+        ins = Instr(name, rhs, op, rdtype, rdims)
+        ins.calls = _CALLS_RE.findall(rhs)
+        mt = _TRIP_RE.search(rhs)
+        if mt:
+            ins.trip = int(mt.group(1))
+        cur.instrs.append(ins)
+        symtab[name] = (rdtype, rdims)
+    return comps, entry, symtab
+
+
+_OPND_RE = re.compile(r"%([\w.\-]+)")
+
+
+def _operand_shapes(ins: Instr, symtab: dict) -> list:
+    """(dtype, dims) of each %name operand inside the op's parens."""
+    m = re.search(r"[a-z][\w\-]*\((.*)\)", ins.text)
+    if not m:
+        return []
+    args = m.group(1)
+    # cut off trailing attrs that sneak into the greedy group
+    args = args.split("), ")[0] if ")," in args and "=%" not in args else args
+    out = []
+    for name in _OPND_RE.findall(args):
+        if name in symtab:
+            out.append(symtab[name])
+    return out
+
+
+def _dot_flops(ins: Instr, symtab: dict) -> float:
+    """2 * |result| * contracted extent, operand shapes via symbol table."""
+    opnds = _operand_shapes(ins, symtab)
+    if not opnds:
+        return 0.0
+    lhs_dims = [int(d) for d in opnds[0][1].split(",") if d]
+    mc = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.text)
+    contracted = 1
+    if mc and mc.group(1):
+        for i in mc.group(1).split(","):
+            contracted *= lhs_dims[int(i)]
+    return 2.0 * _shape_elems(ins.result_dims) * contracted
+
+
+def _conv_flops(ins: Instr, symtab: dict) -> float:
+    opnds = _operand_shapes(ins, symtab)
+    if len(opnds) < 2:
+        return 0.0
+    rhs_dims = [int(d) for d in opnds[1][1].split(",") if d]
+    out = _shape_elems(ins.result_dims)
+    # per output element: prod(kernel)/out_channels MACs; assume last kernel
+    # dim is the output-feature dim (HWIO default)
+    k = 1
+    for d in rhs_dims[:-1]:
+        k *= d
+    return 2.0 * out * k
+
+
+def _instr_bytes(ins: Instr, symtab: dict) -> float:
+    """operands + result bytes (symbol-table resolved)."""
+    total = _shape_bytes(ins.result_dtype, ins.result_dims)
+    for dt, dims in _operand_shapes(ins, symtab):
+        total += _shape_bytes(dt, dims)
+    return float(total)
+
+
+def _wire_factor(op: str, n: int) -> float:
+    if n <= 1:
+        return 0.0
+    if op == "all-gather":
+        return (n - 1) / n
+    if op == "reduce-scatter":
+        return float(n - 1)
+    if op == "all-reduce":
+        return 2 * (n - 1) / n
+    if op == "all-to-all":
+        return (n - 1) / n
+    return 1.0
+
+
+def _group_size(ins: Instr) -> int:
+    me = _GRP_EXPL.search(ins.text)
+    if me:
+        return len(me.group(1).split(","))
+    mi = _GRP_IOTA.search(ins.text)
+    if mi:
+        return int(mi.group(2))
+    return 1
+
+
+class HloCost:
+    def __init__(self, hlo: str):
+        self.comps, self.entry, self.symtab = parse_module(hlo)
+        self.instr_text = {}
+        for c in self.comps.values():
+            for i in c.instrs:
+                self.instr_text[i.name] = i.text
+        self._memo = {}
+        self.collectives = []        # filled during analyze
+        self.flop_sites = []         # (flops*mult, op_name) per dot site
+        # HBM bytes attributed to jax.named_scope regions (e.g. the
+        # "flash_attention" fallback whose traffic a Pallas kernel removes)
+        self.scope_bytes = {}
+        self._analyze()
+
+    def top_flop_sites(self, n: int = 20) -> list:
+        """Heaviest matmul sites (flops incl. loop multiplicity, op_name)."""
+        return sorted(self.flop_sites, key=lambda t: -t[0])[:n]
+
+    SCOPES = ("flash_attention", "wkv_scan", "mamba_scan")
+
+    def _note_scope(self, ins: Instr, nbytes: float):
+        text = ins.text
+        if 'op_name="' not in text:
+            # metadata-less fusions (e.g. wrapped_reduce-window): inherit
+            # the scope of their first scoped operand (one hop)
+            for opnd in _OPND_RE.findall(text)[:4]:
+                t = self.instr_text.get(opnd, "")
+                if 'op_name="' in t:
+                    text = t
+                    break
+        for sc in self.SCOPES:
+            if sc in text:
+                self.scope_bytes[sc] = self.scope_bytes.get(sc, 0.0) + nbytes
+                return
+
+    def _comp_cost(self, name: str, mult: float,
+                   inside_fusion: bool = False) -> tuple:
+        """(flops, bytes) of computation ``name`` executed ``mult`` times.
+        Collectives are appended with their total multiplicity.
+        ``inside_fusion``: byte side-effects (scope notes) are suppressed —
+        fusion interiors contribute flops only."""
+        comp = self.comps.get(name)
+        if comp is None:
+            return 0.0, 0.0
+        flops = bytes_ = 0.0
+        for ins in comp.instrs:
+            base_op = ins.op.replace("-start", "")
+            if ins.op.endswith("-done") or base_op in ("parameter", "constant",
+                                                       "tuple", "get-tuple-element",
+                                                       "bitcast", "iota"):
+                continue
+            if base_op == "dot":
+                f = _dot_flops(ins, self.symtab)
+                flops += f
+                b = _instr_bytes(ins, self.symtab)
+                bytes_ += b
+                if not inside_fusion:
+                    self._note_scope(ins, b * mult)
+                mo = re.search(r'op_name="([^"]*)"', ins.text)
+                self.flop_sites.append((f * mult, mo.group(1) if mo else ins.name))
+            elif base_op == "convolution":
+                flops += _conv_flops(ins, self.symtab)
+                bytes_ += _instr_bytes(ins, self.symtab)
+            elif base_op == "while":
+                f, b = 0.0, 0.0
+                for callee in ins.calls:
+                    cf, cb = self._comp_cost(callee, mult * ins.trip)
+                    f, b = f + cf, b + cb
+                flops += f * ins.trip
+                bytes_ += b * ins.trip
+                continue
+            elif base_op in ("fusion", "call", "conditional", "async-start"):
+                for callee in ins.calls:
+                    cf, _ = self._comp_cost(callee, mult, inside_fusion=True)
+                    flops += cf
+                # layout-only fusions (transpose/copy/convert chains) fold
+                # into dots or fuse away on the TPU target; the CPU backend
+                # materialises them as copies — charging them would
+                # overstate TPU HBM traffic (DESIGN.md par.9)
+                mo = re.search(r'op_name="([^"]*)"', ins.text)
+                last = (mo.group(1).split("/")[-1] if mo else ins.name)
+                if last.startswith(("transpose", "convert", "copy")):
+                    continue
+                b = _instr_bytes(ins, self.symtab)
+                bytes_ += b
+                if not inside_fusion:
+                    self._note_scope(ins, b * mult)
+            elif base_op in COLLECTIVES:
+                nb = _shape_bytes(ins.result_dtype, ins.result_dims)
+                gs = _group_size(ins)
+                if base_op == "collective-permute":
+                    gs = 2
+                self.collectives.append({
+                    "op": base_op, "bytes": nb, "group_size": gs,
+                    "mult": mult,
+                    "wire_bytes": nb * _wire_factor(base_op, gs) * mult,
+                })
+                bytes_ += _instr_bytes(ins, self.symtab)
+            elif base_op in ("gather", "scatter", "dynamic-slice",
+                             "dynamic-update-slice", "sort", "reduce",
+                             "reduce-window", "concatenate", "pad"):
+                # data-movement ops that stay memory ops on TPU
+                b = _instr_bytes(ins, self.symtab)
+                bytes_ += b
+                if not inside_fusion:
+                    self._note_scope(ins, b * mult)
+            else:
+                # elementwise / convert / copy / transpose / broadcast: on
+                # the TPU target these fuse into neighbouring dots/fusions,
+                # so they contribute flops (1/elem) but no extra HBM trips.
+                # (The CPU backend leaves them unfused; charging their
+                # buffers would overstate TPU HBM traffic ~100x.)
+                if base_op in ("add", "multiply", "subtract", "divide",
+                               "exponential", "tanh", "maximum", "minimum",
+                               "rsqrt", "power", "log", "select"):
+                    flops += _shape_elems(ins.result_dims)
+        return flops, bytes_
+
+    def _analyze(self):
+        # fusion interiors must not double-count bytes: handled by only
+        # charging called-computation *flops* for fusions.  While bodies get
+        # both flops and bytes (they run from HBM each iteration).
+        self.flops, self.bytes = self._comp_cost(self.entry, 1.0)
+
+    def collective_summary(self) -> dict:
+        by_op = {}
+        for c in self.collectives:
+            d = by_op.setdefault(c["op"], {"count": 0.0, "bytes": 0.0,
+                                           "wire_bytes": 0.0})
+            d["count"] += c["mult"]
+            d["bytes"] += c["bytes"] * c["mult"]
+            d["wire_bytes"] += c["wire_bytes"]
+        return by_op
+
+    def report(self) -> dict:
+        by_op = self.collective_summary()
+        return {
+            "flops_per_device": self.flops,
+            "bytes_per_device": self.bytes,
+            "collectives": by_op,
+            "collective_wire_bytes_total": sum(d["wire_bytes"]
+                                               for d in by_op.values()),
+            "n_collective_sites": len(self.collectives),
+        }

@@ -1,0 +1,3 @@
+from . import transformer, vgg                      # noqa: F401
+from .common import ModelConfig, MoEConfig, reduced  # noqa: F401
+from .layered import LayeredModel, transformer_as_layered  # noqa: F401

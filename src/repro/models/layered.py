@@ -1,0 +1,125 @@
+"""``LayeredModel``: the per-layer view of a network that split computing
+operates on.
+
+Split-Et-Impera's pipeline (saliency -> CS curve -> candidate cuts ->
+head/bottleneck/tail) needs a model expressed as an ordered list of layers
+with observable intermediate activations.  VGG16 is defined natively this
+way; the transformer zoo exposes the same interface through
+``transformer_as_layered`` (one layer per block), so the paper's technique
+applies to every assigned architecture.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Callable, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass
+class Layer:
+    name: str
+    kind: str                       # 'conv' | 'relu' | 'pool' | 'linear' | 'flatten' | 'block' | ...
+    init: Callable[[Any], Any]      # key -> params (possibly {})
+    apply: Callable[[Any, jax.Array], jax.Array]
+    splittable: bool = True         # is a cut *after* this layer legal?
+
+
+@dataclass
+class LayeredModel:
+    name: str
+    layers: List[Layer]
+    input_shape: tuple              # without batch dim
+    n_classes: int
+
+    def init(self, key) -> list:
+        ks = jax.random.split(key, len(self.layers))
+        return [l.init(k) for l, k in zip(self.layers, ks)]
+
+    def apply(self, params: list, x: jax.Array) -> jax.Array:
+        for l, p in zip(self.layers, params):
+            x = l.apply(p, x)
+        return x
+
+    def apply_capture(self, params: list, x: jax.Array) -> tuple:
+        """Returns (logits, [activation after each layer])."""
+        acts = []
+        for l, p in zip(self.layers, params):
+            x = l.apply(p, x)
+            acts.append(x)
+        return x, acts
+
+    def apply_with_taps(self, params: list, x: jax.Array, taps: list) -> jax.Array:
+        """Forward where ``taps[i]`` is added to layer i's output.
+
+        Differentiating w.r.t. zero taps yields d(output)/d(activation_i) for
+        every layer in a single backward pass (the saliency trick).
+        """
+        for l, p, t in zip(self.layers, params, taps):
+            x = l.apply(p, x) + t
+        return x
+
+    def apply_range(self, params: list, x: jax.Array, start: int, stop: int) -> jax.Array:
+        """Run layers [start, stop)."""
+        for l, p in zip(self.layers[start:stop], params[start:stop]):
+            x = l.apply(p, x)
+        return x
+
+    def cut_points(self) -> list:
+        """Indices i such that a cut after layer i is legal."""
+        return [i for i, l in enumerate(self.layers) if l.splittable and i < len(self.layers) - 1]
+
+    def activation_shapes(self, params: list, batch: int = 1) -> list:
+        x = jax.ShapeDtypeStruct((batch,) + tuple(self.input_shape), jnp.float32)
+        _, acts = jax.eval_shape(self.apply_capture, params, x)
+        return [a.shape for a in acts]
+
+
+def transformer_as_layered(cfg, params) -> LayeredModel:
+    """Per-block LayeredModel view of a zoo model (for saliency/splitting).
+
+    Cuts are only legal at block boundaries: a cut can never land inside an
+    expert dispatch (MoE), a recurrence (SSM/Mamba) or an attention op —
+    this is the family-specific legality rule from DESIGN.md §4.
+    Layer 0 is the embedding (+frontend); the head/final-norm stay fused
+    with the last block (a cut there is RC-equivalent).
+    """
+    from . import transformer as T
+
+    descs, n_groups = block_structure_cached(cfg)
+    layers = [Layer(
+        name="embed", kind="embed",
+        init=lambda k: {},
+        apply=lambda p, batch: T.embed_inputs(params, cfg, batch)[0],
+        splittable=True)]
+
+    def make_block(g, j, desc):
+        lp = jax.tree.map(lambda a: a[g], params["layers"][f"l{j}"])
+
+        def apply(p, x):
+            positions = jnp.arange(x.shape[1])
+            y, _, _ = T.apply_layer_seq(lp, desc, x, cfg, positions,
+                                        causal=True, window=cfg.sliding_window)
+            return y
+        return Layer(name=f"block{g * len(descs) + j}", kind="block",
+                     init=lambda k: {}, apply=apply, splittable=True)
+
+    for g in range(n_groups):
+        for j, desc in enumerate(descs):
+            layers.append(make_block(g, j, desc))
+
+    def head_apply(p, x):
+        x = T._apply_norm(params["final_norm"], x, cfg)
+        return T.logits_from_x(params, cfg, x)
+
+    layers.append(Layer(name="head", kind="head", init=lambda k: {},
+                        apply=head_apply, splittable=False))
+    return LayeredModel(name=cfg.name, layers=layers,
+                        input_shape=(), n_classes=cfg.vocab)
+
+
+def block_structure_cached(cfg):
+    from .transformer import block_structure
+    return block_structure(cfg)

@@ -1,0 +1,240 @@
+"""Shared transformer primitives: RMSNorm, RoPE, GQA attention, SwiGLU MLP.
+
+All functions are pure; parameters are plain dicts of jnp arrays.  The
+attention entry points cover the three execution modes the framework
+needs:
+
+* ``attention``          — full (B,S) self-attention, chunked "flash" style
+                           scan over KV blocks so the S×S score matrix is
+                           never materialised (important for prefill_32k).
+* ``decode_attention``   — one new token against a KV cache (decode shapes).
+* causal and sliding-window masking (the beyond-paper variant that makes
+  ``long_500k`` runnable for dense architectures).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------- norms ----
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * w.astype(jnp.float32)).astype(dt)
+
+
+def layernorm(x: jax.Array, w: jax.Array, b: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return ((x - mu) * jax.lax.rsqrt(var + eps) * w + b).astype(dt)
+
+
+# ----------------------------------------------------------------- rope ----
+def rope_tables(positions: jax.Array, head_dim: int, theta: float) -> tuple:
+    """cos/sin tables for the given absolute positions: (..., head_dim//2)."""
+    freqs = 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (B,S,H,D); cos/sin: (B,S,D/2) or (S,D/2)."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    if cos.ndim == 2:  # (S, D/2) -> broadcast over batch
+        cos, sin = cos[None, :, None, :], sin[None, :, None, :]
+    else:              # (B, S, D/2)
+        cos, sin = cos[:, :, None, :], sin[:, :, None, :]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(dt)
+
+
+# ------------------------------------------------------------ attention ----
+def repeat_kv(k: jax.Array, n_rep: int) -> jax.Array:
+    """(B,S,K,D) -> (B,S,K*n_rep,D) by repeating each kv head."""
+    if n_rep == 1:
+        return k
+    b, s, kh, d = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, kh, n_rep, d)).reshape(b, s, kh * n_rep, d)
+
+
+def _mask_bias(q_pos, k_pos, causal: bool, window: Optional[int]) -> jax.Array:
+    """(Sq,Sk) additive bias from causal / sliding-window constraints."""
+    m = jnp.zeros((q_pos.shape[0], k_pos.shape[0]), jnp.float32)
+    if causal:
+        m = jnp.where(k_pos[None, :] > q_pos[:, None], NEG_INF, m)
+    if window is not None:
+        m = jnp.where(k_pos[None, :] <= q_pos[:, None] - window, NEG_INF, m)
+    return m
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True,
+              window: Optional[int] = None, q_chunk: int = 512,
+              kv_chunk: int = 1024) -> jax.Array:
+    """Chunked (flash-style) multi-head GQA attention.
+
+    q: (B,Sq,H,D);  k,v: (B,Sk,K,D) with H % K == 0.  Returns (B,Sq,H,D).
+    Scans over KV chunks with a running (max, sum, acc) triple so memory is
+    O(Sq * kv_chunk) instead of O(Sq * Sk).
+    """
+    b, sq, h, d = q.shape
+    sk, kh = k.shape[1], k.shape[2]
+    k = repeat_kv(k, h // kh)
+    v = repeat_kv(v, h // kh)
+    scale = 1.0 / math.sqrt(d)
+
+    if sq * sk <= 512 * 512:  # small: plain path (also the reference path)
+        bias = _mask_bias(jnp.arange(sq), jnp.arange(sk), causal and sq > 1, window)
+        s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+        s = s + bias[None, None]
+        p = jax.nn.softmax(s, axis=-1)
+        return jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+    q_chunk = min(q_chunk, sq)
+    kv_chunk = min(kv_chunk, sk)
+    while sq % q_chunk:        # non-power-of-two seq (whisper's 1500 frames)
+        q_chunk -= 1
+    while sk % kv_chunk:
+        kv_chunk -= 1
+    return _flash_chunked(q, k, v, causal=causal, window=window,
+                          q_chunk=q_chunk, kv_chunk=kv_chunk, scale=scale)
+
+
+@jax.named_scope("flash_attention")
+def _flash_chunked(q, k, v, *, causal, window, q_chunk, kv_chunk, scale):
+    """XLA-fallback flash attention, scope-tagged (jax.named_scope) so the
+    HLO cost analyzer can attribute its HBM traffic — the Pallas kernel
+    keeps all of it in VMEM on the TPU target; see benchmarks/roofline.py
+    kernel-adjusted memory term."""
+    b, sq, h, d = q.shape
+    sk = k.shape[1]
+    nq, nk = sq // q_chunk, sk // kv_chunk
+    qc = q.reshape(b, nq, q_chunk, h, d)
+    kc = k.reshape(b, nk, kv_chunk, h, d)
+    vc = v.reshape(b, nk, kv_chunk, h, d)
+
+    def per_q_block(qi, qb):
+        q_pos = qi * q_chunk + jnp.arange(q_chunk)
+        qb32 = qb.astype(jnp.float32) * scale
+
+        def kv_step(carry, inp):
+            m, l, acc = carry
+            ki, kb, vb = inp
+            k_pos = ki * kv_chunk + jnp.arange(kv_chunk)
+            s = jnp.einsum("bqhd,bkhd->bhqk", qb32, kb.astype(jnp.float32))
+            s = s + _mask_bias(q_pos, k_pos, causal, window)[None, None]
+            m_new = jnp.maximum(m, s.max(-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l = l * alpha + p.sum(-1)
+            # bf16 softmax weights into the PV matmul: halves the largest
+            # attention buffer and feeds the MXU its native dtype; the
+            # accumulator stays f32 (flash-kernel convention). §Perf iter 3.
+            pv = jnp.einsum("bhqk,bkhd->bhqd", p.astype(vb.dtype), vb)
+            acc = acc * alpha[..., None] + pv.astype(jnp.float32)
+            return (m_new, l, acc), None
+
+        init = (jnp.full((b, h, q_chunk), NEG_INF, jnp.float32),
+                jnp.zeros((b, h, q_chunk), jnp.float32),
+                jnp.zeros((b, h, q_chunk, d), jnp.float32))
+        (m, l, acc), _ = jax.lax.scan(kv_step, init, (jnp.arange(nk), kc.swapaxes(0, 1), vc.swapaxes(0, 1)))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return out.swapaxes(1, 2).astype(q.dtype)  # (B,q_chunk,H,D)
+
+    out = jax.lax.map(lambda args: per_q_block(*args),
+                      (jnp.arange(nq), qc.swapaxes(0, 1)))
+    return out.swapaxes(0, 1).reshape(b, sq, h, d)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     kv_pos: jax.Array, q_pos: jax.Array,
+                     window: Optional[int] = None) -> jax.Array:
+    """One-token attention against a cache.
+
+    q: (B,1,H,D); caches: (B,S,K,D); kv_pos: (B,S) absolute position of every
+    cache slot (-1 for empty; ring buffers permute positions arbitrarily);
+    q_pos: (B,) absolute position of the new token.
+    """
+    b, _, h, d = q.shape
+    kh = k_cache.shape[2]
+    g = h // kh
+    scale = 1.0 / math.sqrt(d)
+    qg = q.reshape(b, h, d).reshape(b, kh, g, d).astype(jnp.float32)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache.astype(jnp.float32)) * scale
+    valid = (kv_pos >= 0) & (kv_pos <= q_pos[:, None])
+    if window is not None:
+        valid &= kv_pos > (q_pos[:, None] - window)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, 1, h, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------- linear ----
+def dense(x: jax.Array, w: jax.Array, b: Optional[jax.Array] = None) -> jax.Array:
+    y = x @ w
+    if b is not None:
+        y = y + b
+    return y
+
+
+def swiglu(x: jax.Array, p: dict) -> jax.Array:
+    """SwiGLU MLP: p = {w_gate, w_up, w_down}."""
+    return dense(jax.nn.silu(dense(x, p["w_gate"])) * dense(x, p["w_up"]), p["w_down"])
+
+
+def gelu_mlp(x: jax.Array, p: dict) -> jax.Array:
+    """GELU MLP (whisper-style): p = {w_in, b_in, w_out, b_out}."""
+    return dense(jax.nn.gelu(dense(x, p["w_in"], p["b_in"])), p["w_out"], p["b_out"])
+
+
+# ------------------------------------------------------------------ init ----
+def init_dense(key, fan_in, fan_out, dtype) -> jax.Array:
+    std = 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, (fan_in, fan_out), jnp.float32) * std).astype(dtype)
+
+
+def init_attn(key, cfg, with_bias=None, cross=False) -> dict:
+    """GQA attention params. cross=True reuses the same shape for cross-attn."""
+    d, h, kh, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    if cross:
+        kh = h  # whisper cross-attn is MHA
+    ks = jax.random.split(key, 4)
+    dt = cfg.jdtype
+    p = {
+        "wq": init_dense(ks[0], d, h * hd, dt),
+        "wk": init_dense(ks[1], d, kh * hd, dt),
+        "wv": init_dense(ks[2], d, kh * hd, dt),
+        "wo": init_dense(ks[3], h * hd, d, dt),
+    }
+    bias = cfg.qkv_bias if with_bias is None else with_bias
+    if bias:
+        p["bq"] = jnp.zeros((h * hd,), dt)
+        p["bk"] = jnp.zeros((kh * hd,), dt)
+        p["bv"] = jnp.zeros((kh * hd,), dt)
+    return p
+
+
+def init_swiglu(key, d_model, d_ff, dtype) -> dict:
+    ks = jax.random.split(key, 3)
+    return {"w_gate": init_dense(ks[0], d_model, d_ff, dtype),
+            "w_up": init_dense(ks[1], d_model, d_ff, dtype),
+            "w_down": init_dense(ks[2], d_ff, d_model, dtype)}
+
+
+def init_gelu_mlp(key, d_model, d_ff, dtype) -> dict:
+    ks = jax.random.split(key, 2)
+    return {"w_in": init_dense(ks[0], d_model, d_ff, dtype),
+            "b_in": jnp.zeros((d_ff,), dtype),
+            "w_out": init_dense(ks[1], d_ff, d_model, dtype),
+            "b_out": jnp.zeros((d_model,), dtype)}

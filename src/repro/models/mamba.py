@@ -1,0 +1,131 @@
+"""Mamba (S6) selective-state-space mixer, used by the Jamba hybrid.
+
+Follows the Mamba block from arXiv:2312.00752 as instantiated in Jamba
+(arXiv:2403.19887): in-proj to (x, z), depthwise causal conv, data-dependent
+(dt, B, C), diagonal state update, gated out-proj.  Sequence mode is a
+``lax.scan`` over time; decode mode keeps a (conv, ssm) state pair.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import init_dense
+
+DT_RANK = 16
+
+
+def d_inner(cfg) -> int:
+    return cfg.mamba_expand * cfg.d_model
+
+
+def init_mamba(key, cfg) -> dict:
+    d = cfg.d_model
+    di, ds, dc = d_inner(cfg), cfg.mamba_d_state, cfg.mamba_d_conv
+    ks = jax.random.split(key, 5)
+    dt = cfg.jdtype
+    return {
+        "in_proj": init_dense(ks[0], d, 2 * di, dt),
+        "conv": (jax.random.normal(ks[1], (dc, di), jnp.float32) * 0.1).astype(dt),
+        "conv_b": jnp.zeros((di,), dt),
+        "x_proj": init_dense(ks[2], di, DT_RANK + 2 * ds, dt),
+        "dt_proj": init_dense(ks[3], DT_RANK, di, jnp.float32),
+        "dt_bias": jnp.zeros((di,), jnp.float32) + jnp.log(jnp.expm1(0.01)),
+        "A_log": jnp.log(jnp.broadcast_to(jnp.arange(1, ds + 1, dtype=jnp.float32), (di, ds))),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": init_dense(ks[4], di, d, dt),
+    }
+
+
+def _ssm_params(p, xc, ds):
+    """xc: (..., di) conv output -> dt (..., di), B (..., ds), C (..., ds)."""
+    proj = xc @ p["x_proj"]
+    dt_r, B, C = jnp.split(proj.astype(jnp.float32), [DT_RANK, DT_RANK + ds], axis=-1)
+    dt = jax.nn.softplus(dt_r @ p["dt_proj"] + p["dt_bias"])
+    return dt, B, C
+
+
+def mamba_seq(p, x, cfg, init_state=None, *, chunk: int = 128, shard_fn=None):
+    """Full-sequence mamba. x: (B,S,D) -> (y (B,S,D), (conv_state, ssm_state)).
+
+    Chunked recurrence: the (B,*,di,ds) discretised operands are only ever
+    materialised per ``chunk`` timesteps, and ``jax.checkpoint`` at chunk
+    boundaries bounds the backward-pass residency to one chunk of carries —
+    without this a 4k-step training scan saves a (B,di,ds) f32 carry per
+    step (tens of GB/device; see EXPERIMENTS.md §Perf).
+    """
+    sf = shard_fn or (lambda a, k: a)
+    b, s, d = x.shape
+    di, ds, dc = d_inner(cfg), cfg.mamba_d_state, cfg.mamba_d_conv
+    xz = x @ p["in_proj"]
+    xi, z = jnp.split(xz, 2, axis=-1)                       # (B,S,di)
+    xi, z = sf(xi, "mamba_inner"), sf(z, "mamba_inner")
+    # depthwise causal conv over time
+    if init_state is not None:
+        pad = init_state[0].astype(xi.dtype)                # (B,dc-1,di)
+    else:
+        pad = jnp.zeros((b, dc - 1, di), xi.dtype)
+    xp = jnp.concatenate([pad, xi], axis=1)                 # (B,S+dc-1,di)
+    xc = sum(xp[:, i:i + s, :] * p["conv"][i] for i in range(dc)) + p["conv_b"]
+    xc = sf(jax.nn.silu(xc), "mamba_inner")
+    dt, B, C = _ssm_params(p, xc, ds)                       # (B,S,di),(B,S,ds)x2
+    dt = sf(dt, "mamba_inner")
+    A = -jnp.exp(p["A_log"])                                # (di,ds)
+
+    chunk = min(chunk, s)
+    while s % chunk:
+        chunk -= 1
+    nc = s // chunk
+
+    def chunk_body(h, inp):
+        dt_c, B_c, C_c, xc_c = inp                          # (B,chunk,...)
+        dA = jnp.exp(dt_c[..., None] * A)                   # (B,chunk,di,ds)
+        dBx = dt_c[..., None] * B_c[:, :, None, :] * xc_c.astype(jnp.float32)[..., None]
+
+        def step(h, s_inp):
+            dA_t, dBx_t, C_t = s_inp
+            h = sf(dA_t * h + dBx_t, "mamba_state")         # (B,di,ds)
+            y = jnp.einsum("bds,bs->bd", h, C_t)
+            return h, y
+
+        xs = (jnp.moveaxis(dA, 1, 0), jnp.moveaxis(dBx, 1, 0),
+              jnp.moveaxis(C_c, 1, 0))
+        h, ys = jax.lax.scan(step, h, xs)
+        return sf(h, "mamba_state"), jnp.moveaxis(ys, 0, 1)  # (B,chunk,di)
+
+    def split_chunks(a):
+        return jnp.moveaxis(a.reshape(b, nc, chunk, *a.shape[2:]), 1, 0)
+
+    h0 = init_state[1] if init_state is not None else jnp.zeros((b, di, ds), jnp.float32)
+    h0 = sf(h0, "mamba_state")
+    xs = tuple(split_chunks(a) for a in (dt, B, C, xc))
+    with jax.named_scope("mamba_scan"):   # kernel-replaceable (hlo_cost)
+        h, ys = jax.lax.scan(jax.checkpoint(chunk_body), h0, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, di) + p["D"] * xc.astype(jnp.float32)
+    y = (y.astype(x.dtype) * jax.nn.silu(z)) @ p["out_proj"]
+    conv_state = xp[:, -(dc - 1):, :].astype(jnp.float32)
+    return y, (conv_state, h)
+
+
+def mamba_step(p, x, state, cfg):
+    """One-token decode. x: (B,1,D); state=(conv (B,dc-1,di) f32, ssm (B,di,ds) f32)."""
+    b = x.shape[0]
+    di, ds, dc = d_inner(cfg), cfg.mamba_d_state, cfg.mamba_d_conv
+    conv_state, h = state
+    xz = x[:, 0, :] @ p["in_proj"]
+    xi, z = jnp.split(xz, 2, axis=-1)                       # (B,di)
+    win = jnp.concatenate([conv_state.astype(xi.dtype), xi[:, None, :]], axis=1)  # (B,dc,di)
+    xc = jax.nn.silu(jnp.einsum("bcd,cd->bd", win, p["conv"]) + p["conv_b"])
+    dt, B, C = _ssm_params(p, xc, ds)
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt[..., None] * A)
+    h = dA * h + dt[..., None] * B[:, None, :] * xc.astype(jnp.float32)[..., None]
+    y = jnp.einsum("bds,bs->bd", h, C) + p["D"] * xc.astype(jnp.float32)
+    y = (y.astype(x.dtype) * jax.nn.silu(z)) @ p["out_proj"]
+    return y[:, None, :], (win[:, 1:, :].astype(jnp.float32), h)
+
+
+def init_state(cfg, batch):
+    di, ds, dc = d_inner(cfg), cfg.mamba_d_state, cfg.mamba_d_conv
+    return (jnp.zeros((batch, dc - 1, di), jnp.float32),
+            jnp.zeros((batch, di, ds), jnp.float32))

@@ -1,0 +1,178 @@
+"""RWKV-6 (Finch) blocks: time-mix with data-dependent decay + channel-mix.
+
+Follows arXiv:2404.05892.  The WKV recurrence per head (k-dim x v-dim state):
+
+    out_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+    S_t   = diag(w_t) S_{t-1} + k_t v_t^T        w_t = exp(-exp(decay(x_t)))
+
+with data-dependent token-shift interpolation (ddlerp) for r/k/v/g/w.  The
+sequence form here is a plain ``lax.scan`` over time (the compiled body is a
+single step, so lowering 4k..500k-step programs stays cheap); the Pallas
+chunked kernel in ``repro.kernels.rwkv6_scan`` is the TPU hot path and is
+validated against this reference.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import init_dense, rmsnorm
+
+MIX_NAMES = ("w", "k", "v", "r", "g")
+
+
+def init_time_mix(key, cfg) -> dict:
+    d, lo = cfg.d_model, cfg.rwkv_lora_dim
+    hd = cfg.rwkv_head_dim
+    assert d % hd == 0
+    ks = jax.random.split(key, 10)
+    dt = cfg.jdtype
+    return {
+        "wr": init_dense(ks[0], d, d, dt),
+        "wk": init_dense(ks[1], d, d, dt),
+        "wv": init_dense(ks[2], d, d, dt),
+        "wg": init_dense(ks[3], d, d, dt),
+        "wo": init_dense(ks[4], d, d, dt),
+        "maa_x": jnp.zeros((d,), jnp.float32) + 0.5,
+        "maa_base": jnp.zeros((5, d), jnp.float32) + 0.5,
+        "maa_w1": init_dense(ks[5], d, 5 * lo, jnp.float32),
+        "maa_w2": (jax.random.normal(ks[6], (5, lo, d), jnp.float32) * 0.01),
+        "decay_base": jnp.zeros((d,), jnp.float32) - 4.0,
+        "dec_w1": init_dense(ks[7], d, lo, jnp.float32),
+        "dec_w2": init_dense(ks[8], lo, d, jnp.float32) * 0.1,
+        "bonus": jax.random.normal(ks[9], (d,), jnp.float32) * 0.1,
+        "ln_x": jnp.ones((d,), jnp.float32),
+    }
+
+
+def init_channel_mix(key, cfg) -> dict:
+    d = cfg.d_model
+    ks = jax.random.split(key, 3)
+    dt = cfg.jdtype
+    return {
+        "maa_k": jnp.zeros((d,), jnp.float32) + 0.5,
+        "maa_r": jnp.zeros((d,), jnp.float32) + 0.5,
+        "w_k": init_dense(ks[0], d, cfg.d_ff, dt),
+        "w_v": init_dense(ks[1], cfg.d_ff, d, dt),
+        "w_r": init_dense(ks[2], d, d, dt),
+    }
+
+
+def _ddlerp(p, x, x_prev):
+    """Data-dependent lerp producing the 5 mixed inputs (w,k,v,r,g)."""
+    dx = x_prev - x                                      # (B,S,D) or (B,D)
+    xm = x + dx * p["maa_x"]
+    lo = p["maa_w1"].shape[1] // 5
+    t = jnp.tanh(xm.astype(jnp.float32) @ p["maa_w1"])   # (...,5*lo)
+    t = t.reshape(t.shape[:-1] + (5, lo))
+    deltas = jnp.einsum("...nl,nld->...nd", t, p["maa_w2"])  # (...,5,D)
+    mix = p["maa_base"] + deltas                          # (...,5,D)
+    out = x[..., None, :] + dx[..., None, :] * mix
+    return tuple(out[..., i, :].astype(x.dtype) for i in range(5))
+
+
+def _wkv_inputs(p, x, x_prev, cfg):
+    xw, xk, xv, xr, xg = _ddlerp(p, x, x_prev)
+    r = xr @ p["wr"]
+    k = xk @ p["wk"]
+    v = xv @ p["wv"]
+    g = jax.nn.silu(xg @ p["wg"])
+    w = jnp.exp(-jnp.exp(p["decay_base"] +
+                         jnp.tanh(xw.astype(jnp.float32) @ p["dec_w1"]) @ p["dec_w2"]))
+    return r, k, v, g, w
+
+
+def _heads(x, hd):
+    return x.reshape(x.shape[:-1] + (x.shape[-1] // hd, hd))
+
+
+@jax.named_scope("wkv_scan")
+def wkv_scan(r, k, v, w, u, state, *, chunk: int = 64, shard_fn=None):
+    """Sequence WKV. r,k,v,w: (B,S,H,hd) float32; u: (H,hd); state: (B,H,hd,hd).
+
+    Chunked two-level scan: ``jax.checkpoint`` at chunk boundaries keeps the
+    backward pass from saving a (B,H,hd,hd) carry per timestep (which is
+    what sinks a plain 4k-step scan; EXPERIMENTS.md §Perf).
+    Returns (out (B,S,H,hd), final_state).
+    """
+    sf = shard_fn or (lambda a, k: a)
+    b, s = r.shape[0], r.shape[1]
+    chunk = min(chunk, s)
+    while s % chunk:
+        chunk -= 1
+    nc = s // chunk
+    state = sf(state, "wkv_state")
+
+    def step(st, inp):
+        rt, kt, vt, wt = inp                             # (B,H,hd)
+        kv = kt[..., :, None] * vt[..., None, :]         # (B,H,hd,hd)
+        out = jnp.einsum("bhk,bhkv->bhv", rt, st + u[..., None] * kv)
+        st = sf(wt[..., None] * st + kv, "wkv_state")
+        return st, out
+
+    def chunk_body(st, inp):
+        xs = tuple(jnp.moveaxis(a, 1, 0) for a in inp)
+        st, out = jax.lax.scan(step, st, xs)
+        return sf(st, "wkv_state"), jnp.moveaxis(out, 0, 1)
+
+    def split_chunks(a):
+        return jnp.moveaxis(a.reshape(b, nc, chunk, *a.shape[2:]), 1, 0)
+
+    xs = tuple(split_chunks(a) for a in (r, k, v, w))
+    state, out = jax.lax.scan(jax.checkpoint(chunk_body), state, xs)
+    return jnp.moveaxis(out, 0, 1).reshape(r.shape), state
+
+
+def time_mix(p, x, x_prev, state, cfg, shard_fn=None):
+    """x: (B,S,D); x_prev: (B,D) last token of previous chunk.
+
+    Returns (out (B,S,D), new_x_prev (B,D), new_state).
+    """
+    sf = shard_fn or (lambda a, k: a)
+    b, s, d = x.shape
+    hd = cfg.rwkv_head_dim
+    shifted = jnp.concatenate([x_prev[:, None, :], x[:, :-1, :]], axis=1)
+    r, k, v, g, w = _wkv_inputs(p, x, shifted, cfg)
+    rh, kh, vh = (sf(_heads(a.astype(jnp.float32), hd), "heads")
+                  for a in (r, k, v))
+    wh = sf(_heads(w, hd), "heads")
+    u = p["bonus"].reshape(d // hd, hd)
+    out, state = wkv_scan(rh, kh, vh, wh, u, state, shard_fn=shard_fn)
+    out = out.reshape(b, s, d)
+    # per-head groupnorm (ln_x): normalise within each head
+    oh = out.reshape(b, s, d // hd, hd)
+    oh = (oh - oh.mean(-1, keepdims=True)) * jax.lax.rsqrt(oh.var(-1, keepdims=True) + 1e-5)
+    out = oh.reshape(b, s, d) * p["ln_x"]
+    out = (out.astype(x.dtype) * g) @ p["wo"]
+    return out, x[:, -1, :], state
+
+
+def channel_mix(p, x, x_prev):
+    shifted = jnp.concatenate([x_prev[:, None, :], x[:, :-1, :]], axis=1)
+    dx = shifted - x
+    xk = x + dx * p["maa_k"].astype(x.dtype)
+    xr = x + dx * p["maa_r"].astype(x.dtype)
+    k = jnp.square(jax.nn.relu(xk @ p["w_k"]))
+    return jax.nn.sigmoid(xr @ p["w_r"]) * (k @ p["w_v"]), x[:, -1, :]
+
+
+def init_state(cfg, batch, dtype=jnp.float32):
+    d, hd = cfg.d_model, cfg.rwkv_head_dim
+    return {
+        "tm_prev": jnp.zeros((batch, d), dtype),
+        "cm_prev": jnp.zeros((batch, d), dtype),
+        "wkv": jnp.zeros((batch, d // hd, hd, hd), jnp.float32),
+    }
+
+
+def block(p, x, state, cfg, norm_eps):
+    """One full RWKV block over a sequence chunk. state may be None (train)."""
+    b = x.shape[0]
+    st = state if state is not None else init_state(cfg, b, x.dtype)
+    h = rmsnorm(x, p["norm1"], norm_eps)
+    att, tm_prev, wkv = time_mix(p["tm"], h, st["tm_prev"].astype(x.dtype), st["wkv"], cfg)
+    x = x + att
+    h = rmsnorm(x, p["norm2"], norm_eps)
+    ffn, cm_prev = channel_mix(p["cm"], h, st["cm_prev"].astype(x.dtype))
+    x = x + ffn
+    return x, {"tm_prev": tm_prev, "cm_prev": cm_prev, "wkv": wkv}

@@ -1,0 +1,463 @@
+"""Unified model definition covering all six assigned families.
+
+One pair of entry points serves every architecture:
+
+* ``forward(params, cfg, batch)``      — full-sequence (train / prefill)
+* ``serve_step(params, cfg, cache,…)`` — one-token decode against a cache
+
+Layers are *group-stacked*: the repeating period of the architecture (1 for
+uniform stacks, 8 for Jamba's 1-attn:7-mamba interleave) is described by
+``block_structure`` and scanned with ``jax.lax.scan`` + ``jax.checkpoint``,
+so a 94-layer model compiles one block body.  Heterogeneous sublayers inside
+a period are unrolled inside the scanned body.
+
+The ``shard_fn`` hook lets the launcher pin the inter-layer residual stream
+(sequence-parallel) and other activations without the model knowing about
+meshes; it defaults to identity.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import mamba as mamba_mod
+from . import rwkv as rwkv_mod
+from .common import ModelConfig
+from .layers import (apply_rope, attention, decode_attention, dense, gelu_mlp,
+                     init_attn, init_dense, init_gelu_mlp, init_swiglu,
+                     layernorm, rmsnorm, rope_tables, swiglu)
+from .moe import init_moe, moe_ffn
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerDesc:
+    mixer: str        # 'attn' | 'mamba' | 'rwkv'
+    ffn: str          # 'dense' | 'moe' | 'none'
+    cross: bool = False
+
+
+def block_structure(cfg: ModelConfig) -> tuple[list[LayerDesc], int]:
+    """(descs for one period, n_groups)."""
+    if cfg.family == "ssm":
+        return [LayerDesc("rwkv", "none")], cfg.n_layers
+    period = cfg.attn_period if cfg.attn_period > 0 else 1
+    if cfg.moe is not None:
+        period = max(period, cfg.moe.moe_every)
+    assert cfg.n_layers % period == 0, (cfg.n_layers, period)
+    descs = []
+    for j in range(period):
+        mixer = "attn" if cfg.is_attn_layer(j) else "mamba"
+        ffn = "moe" if cfg.is_moe_layer(j) else "dense"
+        descs.append(LayerDesc(mixer, ffn, cross=cfg.family == "encdec"))
+    return descs, cfg.n_layers // period
+
+
+def _norm_params(d, dtype):
+    return {"w": jnp.ones((d,), dtype), "b": jnp.zeros((d,), dtype)}
+
+
+def _apply_norm(p, x, cfg):
+    if cfg.family == "encdec":
+        return layernorm(x, p["w"], p["b"], cfg.norm_eps)
+    return rmsnorm(x, p["w"], cfg.norm_eps)
+
+
+# ------------------------------------------------------------------ init ----
+def init_layer(key, desc: LayerDesc, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(key, 6)
+    d, dt = cfg.d_model, cfg.jdtype
+    p = {"norm1": _norm_params(d, dt), "norm2": _norm_params(d, dt)}
+    if desc.mixer == "attn":
+        p["attn"] = init_attn(ks[0], cfg)
+    elif desc.mixer == "mamba":
+        p["mamba"] = mamba_mod.init_mamba(ks[0], cfg)
+    else:  # rwkv
+        p["tm"] = rwkv_mod.init_time_mix(ks[0], cfg)
+        p["cm"] = rwkv_mod.init_channel_mix(ks[1], cfg)
+    if desc.cross:
+        p["norm_cross"] = _norm_params(d, dt)
+        p["cross"] = init_attn(ks[2], cfg, with_bias=True, cross=True)
+    if desc.ffn == "dense":
+        p["ffn"] = (init_gelu_mlp(ks[3], d, cfg.d_ff, dt) if cfg.family == "encdec"
+                    else init_swiglu(ks[3], d, cfg.d_ff, dt))
+    elif desc.ffn == "moe":
+        p["ffn"] = init_moe(ks[3], d, cfg.moe, dt)
+    return p
+
+
+def init_params(key, cfg: ModelConfig) -> dict:
+    descs, n_groups = block_structure(cfg)
+    ks = jax.random.split(key, 8)
+    d, dt = cfg.d_model, cfg.jdtype
+
+    def one_group(gk):
+        gks = jax.random.split(gk, len(descs))
+        return {f"l{j}": init_layer(gks[j], descs[j], cfg) for j in range(len(descs))}
+
+    gkeys = jax.random.split(ks[0], n_groups)
+    groups = jax.tree.map(lambda *xs: jnp.stack(xs), *[one_group(k) for k in gkeys])
+    if n_groups == 1:  # keep the leading group axis for a uniform layout
+        groups = jax.tree.map(lambda x: x, groups)
+    params = {
+        "embed": (jax.random.normal(ks[1], (cfg.vocab, d), jnp.float32) * 0.02).astype(dt),
+        "final_norm": _norm_params(d, dt),
+        "layers": groups,
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = init_dense(ks[2], d, cfg.vocab, dt)
+    if cfg.family == "encdec":
+        eks = jax.random.split(ks[3], cfg.n_enc_layers)
+        enc_desc = LayerDesc("attn", "dense")
+        enc_layers = jax.tree.map(lambda *xs: jnp.stack(xs),
+                                  *[init_layer(k, enc_desc, cfg) for k in eks])
+        params["enc"] = {
+            "proj": init_dense(ks[4], cfg.d_frontend, d, dt),
+            "pos": (jax.random.normal(ks[5], (cfg.n_frames, d), jnp.float32) * 0.01).astype(dt),
+            "layers": enc_layers,
+            "final_norm": _norm_params(d, dt),
+        }
+    if cfg.family == "vlm":
+        params["projector"] = {
+            "w1": init_dense(ks[4], cfg.d_frontend, d, dt),
+            "b1": jnp.zeros((d,), dt),
+            "w2": init_dense(ks[5], d, d, dt),
+            "b2": jnp.zeros((d,), dt),
+        }
+    return params
+
+
+# ----------------------------------------------------------- full-seq fwd ----
+def _qkv(p, x, cfg, cross_src=None):
+    b, s, _ = x.shape
+    hd = cfg.hd
+    src = x if cross_src is None else cross_src
+    kh = cfg.n_heads if cross_src is not None else cfg.n_kv_heads
+    q = dense(x, p["wq"], p.get("bq")).reshape(b, s, cfg.n_heads, hd)
+    k = dense(src, p["wk"], p.get("bk")).reshape(b, src.shape[1], kh, hd)
+    v = dense(src, p["wv"], p.get("bv")).reshape(b, src.shape[1], kh, hd)
+    return q, k, v
+
+
+def _attn_seq(p, x, cfg, positions, *, causal, window, cross_src=None,
+              shard_fn=None):
+    sf = shard_fn or (lambda a, k: a)
+    q, k, v = _qkv(p, x, cfg, cross_src)
+    q = sf(q, "heads")      # (B,S,H,hd): heads over 'model'
+    k = sf(k, "heads")      # dropped automatically when K < model-axis
+    v = sf(v, "heads")
+    if cross_src is None:  # rope only for self-attention
+        cos, sin = rope_tables(positions, cfg.hd, cfg.rope_theta)
+        q, k = apply_rope(q, cos, sin), apply_rope(k, cos, sin)
+    out = sf(attention(q, k, v, causal=causal, window=window), "heads")
+    b, s = x.shape[0], x.shape[1]
+    return dense(out.reshape(b, s, cfg.n_heads * cfg.hd), p["wo"]), (k, v)
+
+
+def apply_layer_seq(p, desc: LayerDesc, x, cfg, positions, *, causal=True,
+                    window=None, enc_out=None, shard_fn=None, collect_cache=False):
+    """One sublayer over a full sequence.  Returns (x, aux, cache_entry)."""
+    sf = shard_fn or (lambda a, k: a)
+    aux = jnp.zeros((), jnp.float32)
+    cache = {}
+    h = _apply_norm(p["norm1"], x, cfg)
+    if desc.mixer == "attn":
+        att, (k, v) = _attn_seq(p["attn"], h, cfg, positions, causal=causal,
+                                window=window, shard_fn=shard_fn)
+        if collect_cache:
+            cache["k"], cache["v"] = k, v
+    elif desc.mixer == "mamba":
+        att, state = mamba_mod.mamba_seq(p["mamba"], h, cfg, shard_fn=shard_fn)
+        if collect_cache:
+            cache["conv"], cache["ssm"] = state
+    else:  # rwkv: norm1 -> time-mix
+        st = rwkv_mod.init_state(cfg, x.shape[0], x.dtype)
+        att, tm_prev, wkv = rwkv_mod.time_mix(p["tm"], h, st["tm_prev"],
+                                              st["wkv"], cfg, shard_fn=shard_fn)
+        if collect_cache:
+            cache["tm_prev"], cache["wkv"] = tm_prev, wkv
+    x = sf(x + att, "residual")
+    if desc.cross and enc_out is not None:
+        h = _apply_norm(p["norm_cross"], x, cfg)
+        catt, (ck, cv) = _attn_seq(p["cross"], h, cfg, positions,
+                                   causal=False, window=None, cross_src=enc_out,
+                                   shard_fn=shard_fn)
+        if collect_cache:
+            cache["ck"], cache["cv"] = ck, cv
+        x = x + catt
+    h = _apply_norm(p["norm2"], x, cfg)
+    if desc.ffn == "dense":
+        if cfg.family == "encdec":
+            f = gelu_mlp(h, p["ffn"])
+        else:
+            g = sf(jax.nn.silu(dense(h, p["ffn"]["w_gate"]))
+                   * dense(h, p["ffn"]["w_up"]), "ffn_hidden")
+            f = dense(g, p["ffn"]["w_down"])
+    elif desc.ffn == "moe":
+        f, aux = moe_ffn(h, p["ffn"], cfg.moe, shard_fn=shard_fn)
+    else:  # rwkv channel mix
+        f, cm_prev = rwkv_mod.channel_mix(p["cm"], h, jnp.zeros_like(h[:, 0]))
+        if collect_cache:
+            cache["cm_prev"] = cm_prev
+    x = sf(x + f, "residual")
+    return x, aux, cache
+
+
+def _encoder(params, cfg, frames, shard_fn):
+    """Whisper-style encoder on stub frame embeddings (B, F, d_frontend)."""
+    x = frames @ params["enc"]["proj"] + params["enc"]["pos"][None]
+    desc = LayerDesc("attn", "dense")
+    positions = jnp.arange(frames.shape[1])
+
+    def body(x, lp):
+        x, _, _ = apply_layer_seq(lp, desc, x, cfg, positions, causal=False,
+                                  shard_fn=shard_fn)
+        return x, None
+
+    x, _ = jax.lax.scan(jax.checkpoint(body), x, params["enc"]["layers"])
+    return _apply_norm(params["enc"]["final_norm"], x, cfg)
+
+
+def embed_inputs(params, cfg, batch):
+    """Token (+frontend) embedding -> (x (B,S,D), positions (S,), enc_out)."""
+    tokens = batch["tokens"]
+    x = params["embed"][tokens]
+    enc_out = None
+    if cfg.family == "vlm":
+        pe = batch["patch_embeds"]
+        pj = params["projector"]
+        patches = jnp.tanh(pe @ pj["w1"] + pj["b1"]) @ pj["w2"] + pj["b2"]
+        x = jnp.concatenate([patches.astype(x.dtype), x], axis=1)
+    positions = jnp.arange(x.shape[1])
+    return x, positions, enc_out
+
+
+def forward(params, cfg: ModelConfig, batch: dict, *, shard_fn=None,
+            collect_cache=False, logit_chunk: int = 512):
+    """Full-sequence forward.
+
+    batch: tokens (B,S_text) [+ patch_embeds (B,P,df) | frames (B,F,df)].
+    Returns dict(logits=(B,S,V) [unless chunked loss is used downstream],
+    aux=scalar, cache=group-stacked cache or None, x_final).
+    """
+    descs, n_groups = block_structure(cfg)
+    x, positions, _ = embed_inputs(params, cfg, batch)
+    enc_out = (_encoder(params, cfg, batch["frames"], shard_fn)
+               if cfg.family == "encdec" else None)
+    sf = shard_fn or (lambda a, k: a)
+    x = sf(x, "residual")
+    window = cfg.sliding_window
+
+    def body(carry, group_p):
+        x, aux = carry
+        caches = {}
+        for j, desc in enumerate(descs):
+            x, a, c = apply_layer_seq(group_p[f"l{j}"], desc, x, cfg, positions,
+                                      causal=True, window=window, enc_out=enc_out,
+                                      shard_fn=shard_fn, collect_cache=collect_cache)
+            aux = aux + a
+            caches[f"l{j}"] = c
+        return (x, aux), caches
+
+    wrapped = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    (x, aux), caches = jax.lax.scan(wrapped, (x, jnp.zeros((), jnp.float32)),
+                                    params["layers"])
+    x = _apply_norm(params["final_norm"], x, cfg)
+    return {"x": x, "aux": aux, "cache": caches if collect_cache else None,
+            "positions": positions}
+
+
+def logits_from_x(params, cfg, x):
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    return x @ head
+
+
+def loss_fn(params, cfg: ModelConfig, batch: dict, *, shard_fn=None,
+            chunk: int = 512, aux_weight: float = 0.01):
+    """Chunked softmax cross-entropy (never materialises (B,S,V) in f32)."""
+    out = forward(params, cfg, batch, shard_fn=shard_fn)
+    x, aux = out["x"], out["aux"]
+    labels = batch["labels"]
+    if cfg.family == "vlm":  # patch positions carry no next-token loss
+        x = x[:, -labels.shape[1]:, :]
+    b, s, d = x.shape
+    chunk = min(chunk, s)
+    while s % chunk:
+        chunk -= 1
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    sf = shard_fn or (lambda a, k: a)
+
+    def ce(xc, lc):
+        logits = sf((xc @ head).astype(jnp.float32), "logits")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        return (lse - gold).sum()
+
+    def step(tot, inp):
+        xc, lc = inp
+        return tot + ce(xc, lc), None
+
+    xs = (x.reshape(b, s // chunk, chunk, d).swapaxes(0, 1),
+          labels.reshape(b, s // chunk, chunk).swapaxes(0, 1))
+    total, _ = jax.lax.scan(step, jnp.zeros((), jnp.float32), xs)
+    ntok = b * s
+    return total / ntok + aux_weight * aux, {"ce": total / ntok, "aux": aux}
+
+
+# ------------------------------------------------------------------ cache ----
+def cache_len_for(cfg: ModelConfig, seq_len: int) -> int:
+    if cfg.sliding_window is not None:
+        return min(seq_len, cfg.sliding_window)
+    return seq_len
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int, dtype=None) -> dict:
+    """Empty decode cache (group-stacked leading dim)."""
+    descs, n_groups = block_structure(cfg)
+    dt = dtype or cfg.jdtype
+    sc = cache_len_for(cfg, seq_len)
+    hd = cfg.hd
+
+    def per_layer(desc: LayerDesc):
+        c = {}
+        if desc.mixer == "attn":
+            c["k"] = jnp.zeros((n_groups, batch, sc, cfg.n_kv_heads, hd), dt)
+            c["v"] = jnp.zeros((n_groups, batch, sc, cfg.n_kv_heads, hd), dt)
+            c["kv_pos"] = jnp.full((n_groups, batch, sc), -1, jnp.int32)
+        elif desc.mixer == "mamba":
+            di, ds, dc = mamba_mod.d_inner(cfg), cfg.mamba_d_state, cfg.mamba_d_conv
+            c["conv"] = jnp.zeros((n_groups, batch, dc - 1, di), jnp.float32)
+            c["ssm"] = jnp.zeros((n_groups, batch, di, ds), jnp.float32)
+        else:  # rwkv
+            nh = cfg.d_model // cfg.rwkv_head_dim
+            c["tm_prev"] = jnp.zeros((n_groups, batch, cfg.d_model), jnp.float32)
+            c["cm_prev"] = jnp.zeros((n_groups, batch, cfg.d_model), jnp.float32)
+            c["wkv"] = jnp.zeros((n_groups, batch, nh, cfg.rwkv_head_dim, cfg.rwkv_head_dim), jnp.float32)
+        if desc.cross:
+            c["ck"] = jnp.zeros((n_groups, batch, cfg.n_frames, cfg.n_heads, hd), dt)
+            c["cv"] = jnp.zeros((n_groups, batch, cfg.n_frames, cfg.n_heads, hd), dt)
+        return c
+
+    return {f"l{j}": per_layer(d) for j, d in enumerate(descs)}
+
+
+def _attn_decode(p, h, cfg, cache_l, pos, window):
+    """h: (B,1,D); cache_l: {'k','v','kv_pos'} (B,Sc,K,hd)."""
+    b = h.shape[0]
+    hd = cfg.hd
+    q = dense(h, p["wq"], p.get("bq")).reshape(b, 1, cfg.n_heads, hd)
+    k = dense(h, p["wk"], p.get("bk")).reshape(b, 1, cfg.n_kv_heads, hd)
+    v = dense(h, p["wv"], p.get("bv")).reshape(b, 1, cfg.n_kv_heads, hd)
+    cos, sin = rope_tables(pos[None], hd, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    sc = cache_l["k"].shape[1]
+    slot = pos % sc
+    kc = jax.lax.dynamic_update_slice(cache_l["k"], k, (0, slot, 0, 0))
+    vc = jax.lax.dynamic_update_slice(cache_l["v"], v, (0, slot, 0, 0))
+    kv_pos = jax.lax.dynamic_update_slice(
+        cache_l["kv_pos"], jnp.full((b, 1), pos, jnp.int32), (0, slot))
+    q_pos = jnp.full((b,), pos, jnp.int32)
+    out = decode_attention(q, kc, vc, kv_pos, q_pos, window)
+    out = dense(out.reshape(b, 1, cfg.n_heads * hd), p["wo"])
+    return out, {"k": kc, "v": vc, "kv_pos": kv_pos}
+
+
+def apply_layer_decode(p, desc: LayerDesc, x, cfg, cache_l, pos, window):
+    cache_new = dict(cache_l)
+    h = _apply_norm(p["norm1"], x, cfg)
+    if desc.mixer == "attn":
+        att, upd = _attn_decode(p["attn"], h, cfg, cache_l, pos, window)
+        cache_new.update(upd)
+    elif desc.mixer == "mamba":
+        att, (conv, ssm) = mamba_mod.mamba_step(p["mamba"], h, (cache_l["conv"], cache_l["ssm"]), cfg)
+        cache_new["conv"], cache_new["ssm"] = conv, ssm
+    else:
+        att, tm_prev, wkv = rwkv_mod.time_mix(
+            p["tm"], h, cache_l["tm_prev"].astype(h.dtype), cache_l["wkv"], cfg)
+        cache_new["tm_prev"], cache_new["wkv"] = tm_prev.astype(jnp.float32), wkv
+    x = x + att
+    if desc.cross:
+        h = _apply_norm(p["norm_cross"], x, cfg)
+        b = h.shape[0]
+        q = dense(h, p["cross"]["wq"], p["cross"].get("bq")).reshape(b, 1, cfg.n_heads, cfg.hd)
+        f = cache_l["ck"].shape[1]
+        kv_pos = jnp.broadcast_to(jnp.arange(f, dtype=jnp.int32), (b, f))
+        catt = decode_attention(q, cache_l["ck"], cache_l["cv"], kv_pos,
+                                jnp.full((b,), f, jnp.int32), None)
+        x = x + dense(catt.reshape(b, 1, cfg.n_heads * cfg.hd), p["cross"]["wo"])
+    h = _apply_norm(p["norm2"], x, cfg)
+    if desc.ffn == "dense":
+        f = gelu_mlp(h, p["ffn"]) if cfg.family == "encdec" else swiglu(h, p["ffn"])
+    elif desc.ffn == "moe":
+        f, _ = moe_ffn(h, p["ffn"], cfg.moe)
+    else:
+        f, cm_prev = rwkv_mod.channel_mix(p["cm"], h, cache_l["cm_prev"].astype(h.dtype))
+        cache_new["cm_prev"] = cm_prev.astype(jnp.float32)
+    return x + f, cache_new
+
+
+def serve_step(params, cfg: ModelConfig, cache: dict, token: jax.Array,
+               pos: jax.Array, *, shard_fn=None):
+    """One decode step.  token: (B,1) int32; pos: scalar int32 position.
+
+    Returns (logits (B,V), new cache).
+    """
+    descs, _ = block_structure(cfg)
+    sf = shard_fn or (lambda a, k: a)
+    x = params["embed"][token]
+    window = cfg.sliding_window
+
+    def body(x, inp):
+        group_p, cache_g = inp
+        new_g = {}
+        for j, desc in enumerate(descs):
+            x, new_g[f"l{j}"] = apply_layer_decode(group_p[f"l{j}"], desc, x, cfg,
+                                                   cache_g[f"l{j}"], pos, window)
+        x = sf(x, "decode_residual")
+        return x, new_g
+
+    x, new_cache = jax.lax.scan(body, x, (params["layers"], cache))
+    x = _apply_norm(params["final_norm"], x, cfg)
+    logits = logits_from_x(params, cfg, x)[:, 0, :]
+    return sf(logits.astype(jnp.float32), "decode_logits"), new_cache
+
+
+def prefill(params, cfg: ModelConfig, batch: dict, cache_seq_len: int, *, shard_fn=None):
+    """Run the full prompt, build a decode cache of ``cache_seq_len`` slots.
+
+    Returns (last-token logits (B,V), cache, next_pos).
+    """
+    out = forward(params, cfg, batch, shard_fn=shard_fn, collect_cache=True)
+    x = out["x"]
+    s_in = x.shape[1]
+    logits = logits_from_x(params, cfg, x[:, -1:, :])[:, 0, :]
+    raw = out["cache"]
+    descs, n_groups = block_structure(cfg)
+    b = x.shape[0]
+    cache = init_cache(cfg, b, cache_seq_len)
+    sc = cache_len_for(cfg, cache_seq_len)
+
+    for j, desc in enumerate(descs):
+        cj, rj = cache[f"l{j}"], raw[f"l{j}"]
+        if desc.mixer == "attn":
+            k, v = rj["k"], rj["v"]  # (G,B,S,K,hd)
+            take = min(sc, s_in)
+            src_pos = jnp.arange(s_in - take, s_in)
+            slots = src_pos % sc
+            cj["k"] = cj["k"].at[:, :, slots].set(k[:, :, s_in - take:])
+            cj["v"] = cj["v"].at[:, :, slots].set(v[:, :, s_in - take:])
+            cj["kv_pos"] = cj["kv_pos"].at[:, :, slots].set(
+                jnp.broadcast_to(src_pos, (n_groups, b, take)).astype(jnp.int32))
+        elif desc.mixer == "mamba":
+            cj["conv"], cj["ssm"] = raw[f"l{j}"]["conv"], raw[f"l{j}"]["ssm"]
+        else:
+            cj["tm_prev"] = rj["tm_prev"].astype(jnp.float32)
+            cj["cm_prev"] = rj["cm_prev"].astype(jnp.float32)
+            cj["wkv"] = rj["wkv"]
+        if desc.cross:
+            cj["ck"], cj["cv"] = rj["ck"], rj["cv"]
+    return logits, cache, jnp.asarray(s_in, jnp.int32)

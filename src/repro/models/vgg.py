@@ -1,0 +1,134 @@
+"""VGG16 as a :class:`LayeredModel` — the paper's experimental workhorse.
+
+Matches the torchvision VGG16 the paper instruments (Table I/II: 138,357,544
+parameters, 224x224x3 input, 1000 classes), plus a reduced CIFAR-style
+variant (``vgg_cifar``) that is actually trainable on CPU for the paper's
+experiments (CIFAR10 is "a placeholder" in the paper itself, §V).
+
+Layout is NHWC (TPU-native).  The layer list mirrors the paper's indexing:
+conv/relu pairs and maxpools in 5 blocks — Fig. 2's split candidates
+(block2_pool=5*, block3_pool=9*, block4_pool=13*, block4_conv2=11,
+block5_conv2=15) refer to *feature-extractor op indices* counting
+conv/pool ops, which we preserve via ``feature_index``.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .layered import Layer, LayeredModel
+
+VGG16_PLAN = [64, 64, "M", 128, 128, "M", 256, 256, 256, "M",
+              512, 512, 512, "M", 512, 512, 512, "M"]
+
+
+def _conv_init(key, kh, kw, cin, cout):
+    fan_in = kh * kw * cin
+    std = math.sqrt(2.0 / fan_in)
+    k1, _ = jax.random.split(key)
+    return {"w": jax.random.normal(k1, (kh, kw, cin, cout), jnp.float32) * std,
+            "b": jnp.zeros((cout,), jnp.float32)}
+
+
+def _conv_apply(p, x):
+    y = jax.lax.conv_general_dilated(
+        x, p["w"], window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + p["b"]
+
+
+def _pool_apply(_, x):
+    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                 (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+
+
+def _linear_init(key, fin, fout):
+    std = math.sqrt(1.0 / fin)
+    k1, _ = jax.random.split(key)
+    return {"w": jax.random.normal(k1, (fin, fout), jnp.float32) * std,
+            "b": jnp.zeros((fout,), jnp.float32)}
+
+
+def build_vgg(plan=None, *, input_hw=224, in_ch=3, n_classes=1000,
+              classifier_width=4096, name="vgg16") -> LayeredModel:
+    plan = plan or VGG16_PLAN
+    layers = []
+    cin = in_ch
+    hw = input_hw
+    for spec in plan:
+        if spec == "M":
+            if hw < 2:   # tiny inputs: skip pools that would hit 0x0
+                continue
+            layers.append(Layer(f"pool{len(layers)}", "pool",
+                                lambda k: {}, _pool_apply, splittable=True))
+            hw //= 2
+        else:
+            cout = spec
+            layers.append(Layer(f"conv{len(layers)}", "conv",
+                                partial(_conv_init, kh=3, kw=3, cin=cin, cout=cout),
+                                _conv_apply, splittable=False))
+            layers.append(Layer(f"relu{len(layers)}", "relu",
+                                lambda k: {}, lambda p, x: jax.nn.relu(x),
+                                splittable=True))
+            cin = cout
+    feat = hw * hw * cin
+    layers.append(Layer("flatten", "flatten", lambda k: {},
+                        lambda p, x: x.reshape(x.shape[0], -1), splittable=True))
+    dims = [feat, classifier_width, classifier_width, n_classes]
+    for i in range(3):
+        layers.append(Layer(f"fc{i}", "linear",
+                            partial(_linear_init, fin=dims[i], fout=dims[i + 1]),
+                            lambda p, x: x @ p["w"] + p["b"],
+                            splittable=i < 2))
+        if i < 2:
+            layers.append(Layer(f"fc{i}_relu", "relu", lambda k: {},
+                                lambda p, x: jax.nn.relu(x), splittable=True))
+    return LayeredModel(name=name, layers=layers,
+                        input_shape=(input_hw, input_hw, in_ch),
+                        n_classes=n_classes)
+
+
+def vgg16() -> LayeredModel:
+    """Full VGG16: 138,357,544 params (paper Table II)."""
+    return build_vgg()
+
+
+VGG_CIFAR_PLAN = [32, 32, "M", 64, 64, "M", 128, 128, "M"]
+
+
+def vgg_cifar(n_classes=10, input_hw=32, width_mult=1.0) -> LayeredModel:
+    """Reduced VGG for CPU-trainable paper experiments.
+
+    Same VGG idiom (stacks of 3x3 conv+ReLU and maxpools, blocks of
+    irregular output size — the property that makes split-point choice
+    non-trivial, §V) but 6 convs / 3 blocks so it trains from scratch on
+    CPU without batchnorm.  ``vgg16()`` stays the exact 138M-param net for
+    the Tables I-II reproduction.
+    """
+    plan = [max(8, int(c * width_mult)) if c != "M" else "M"
+            for c in VGG_CIFAR_PLAN]
+    return build_vgg(plan, input_hw=input_hw, in_ch=3, n_classes=n_classes,
+                     classifier_width=256, name="vgg_cifar")
+
+
+def feature_index(model: LayeredModel) -> list:
+    """Indices of conv/pool ops in paper numbering (conv+pool ops only).
+
+    Fig. 2's x-axis counts the 18 feature ops (13 conv + 5 pool); returns the
+    LayeredModel layer index of each, taking the post-ReLU activation for
+    convs (saliency is computed on post-activation maps).
+    """
+    out = []
+    for i, l in enumerate(model.layers):
+        if l.kind == "conv":
+            out.append(i + 1)      # the relu right after
+        elif l.kind == "pool":
+            out.append(i)
+    return out
+
+
+def n_params(model: LayeredModel, params) -> int:
+    return sum(int(jnp.size(x)) for x in jax.tree.leaves(params))

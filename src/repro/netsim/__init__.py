@@ -1,0 +1,4 @@
+"""Communication-aware discrete-event simulation (paper §IV)."""
+from .channel import Channel, INTERFACES            # noqa: F401
+from .protocols import simulate_transfer            # noqa: F401
+from .simulator import ApplicationSimulator, NetworkConfig  # noqa: F401

@@ -1,0 +1,41 @@
+"""Channel model (the *netsim* layer): propagation delay, capacity,
+interface speed, and the loss *saboteur* (paper §IV's five parameters).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class Channel:
+    latency_s: float            # propagation delay per packet
+    capacity_bps: float         # link available bandwidth
+    interface_bps: float        # physical interface speed (NIC)
+    loss_rate: float = 0.0      # saboteur: per-packet loss probability
+    seed: int = 0
+
+    @property
+    def effective_bps(self) -> float:
+        return min(self.capacity_bps, self.interface_bps)
+
+    def serialization_s(self, n_bytes: int) -> float:
+        return n_bytes * 8.0 / self.effective_bps
+
+    def loss_mask(self, n: int, stream: int = 0) -> np.ndarray:
+        """Deterministic per-packet loss draws (True = lost)."""
+        rng = np.random.default_rng((self.seed, stream))
+        return rng.random(n) < self.loss_rate
+
+
+# Interface presets from the paper (§IV): Gigabit, Fast-Ethernet, Wi-Fi.
+INTERFACES = {
+    "gigabit": 1000e6,
+    "fast-ethernet": 100e6,
+    "wifi": 160e6,
+    "10gbe": 10e9,
+    # TPU fabric profiles for the multi-pod adaptation (DESIGN.md §3)
+    "tpu-ici-link": 50e9 * 8,          # 50 GB/s per ICI link
+    "tpu-dcn": 25e9,
+}

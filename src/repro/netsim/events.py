@@ -1,0 +1,35 @@
+"""Minimal discrete-event engine (the *supervisor* layer, paper §IV).
+
+Executes events in correct temporal order; callbacks may schedule further
+events.  Deterministic tie-breaking by insertion sequence keeps runs
+reproducible.
+"""
+from __future__ import annotations
+
+import heapq
+from typing import Callable
+
+
+class EventQueue:
+    def __init__(self):
+        self._q = []
+        self._seq = 0
+        self.now = 0.0
+
+    def schedule(self, time: float, fn: Callable[[], None]) -> None:
+        assert time >= self.now - 1e-12, (time, self.now)
+        heapq.heappush(self._q, (time, self._seq, fn))
+        self._seq += 1
+
+    def run(self, until: float = float("inf"), max_events: int = 10_000_000) -> None:
+        n = 0
+        while self._q and self._q[0][0] <= until:
+            t, _, fn = heapq.heappop(self._q)
+            self.now = t
+            fn()
+            n += 1
+            if n >= max_events:
+                raise RuntimeError("event budget exceeded (livelock?)")
+
+    def empty(self) -> bool:
+        return not self._q

@@ -1,0 +1,125 @@
+"""Transport-layer models on the discrete-event engine (paper §IV).
+
+TCP: windowed reliable stream.  Lost packets are detected by retransmission
+timeout (RTO = 2*RTT + serialization) and resent until delivered — latency
+grows with the loss rate, accuracy is preserved (Fig. 3 / Fig. 4 left).
+
+UDP: fire-and-forget.  Latency is loss-independent; lost packets are simply
+missing at the receiver (Fig. 4 right) — the receiver zeroes the matching
+payload chunks and accuracy degrades.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .channel import Channel
+from .events import EventQueue
+
+MTU_BYTES = 1500
+
+
+@dataclass
+class TransferResult:
+    duration_s: float                 # first-bit-sent -> last-byte-delivered
+    n_packets: int
+    n_transmissions: int              # includes retransmits
+    delivered: np.ndarray             # bool per packet (UDP can drop)
+
+    @property
+    def loss_fraction(self) -> float:
+        return 1.0 - float(self.delivered.mean()) if len(self.delivered) else 0.0
+
+
+def n_packets_for(n_bytes: int, mtu: int = MTU_BYTES) -> int:
+    return max(1, math.ceil(n_bytes / mtu))
+
+
+def simulate_tcp(n_bytes: int, ch: Channel, *, window: int = 32,
+                 mtu: int = MTU_BYTES, stream: int = 0,
+                 max_rounds: int = 64) -> TransferResult:
+    """Windowed reliable transfer; returns total delivery time."""
+    n = n_packets_for(n_bytes, mtu)
+    ser = ch.serialization_s(mtu)
+    rtt = 2 * ch.latency_s
+    rto = 2 * rtt + ser + 1e-6
+    rng = np.random.default_rng((ch.seed, stream, 17))
+
+    q = EventQueue()
+    state = {
+        "pending": list(range(n)),     # packets needing (re)send, FIFO
+        "outstanding": set(),
+        "acked": np.zeros(n, bool),
+        "link_free": 0.0,
+        "done_time": 0.0,
+        "tx": 0,
+        "rounds": np.zeros(n, int),
+    }
+
+    def try_send():
+        while state["pending"] and len(state["outstanding"]) < window:
+            pkt = state["pending"].pop(0)
+            if state["acked"][pkt]:
+                continue
+            start = max(q.now, state["link_free"])
+            state["link_free"] = start + ser
+            state["tx"] += 1
+            state["outstanding"].add(pkt)
+            state["rounds"][pkt] += 1
+            if state["rounds"][pkt] > max_rounds:
+                raise RuntimeError("TCP retry budget exceeded")
+            lost = rng.random() < ch.loss_rate
+            if not lost:
+                q.schedule(state["link_free"] + ch.latency_s,
+                           lambda p=pkt: on_arrive(p))
+            q.schedule(state["link_free"] + rto, lambda p=pkt: on_timeout(p))
+
+    def on_arrive(pkt):
+        # data arrives; ACK flies back one propagation later
+        q.schedule(q.now + ch.latency_s, lambda p=pkt: on_ack(p))
+        state["done_time"] = max(state["done_time"], q.now)
+
+    def on_ack(pkt):
+        if not state["acked"][pkt]:
+            state["acked"][pkt] = True
+            state["outstanding"].discard(pkt)
+            try_send()
+
+    def on_timeout(pkt):
+        if not state["acked"][pkt] and pkt in state["outstanding"]:
+            state["outstanding"].discard(pkt)
+            state["pending"].append(pkt)
+            try_send()
+
+    q.schedule(0.0, try_send)
+    q.run()
+    assert state["acked"].all()
+    return TransferResult(state["done_time"], n, state["tx"], np.ones(n, bool))
+
+
+def simulate_udp(n_bytes: int, ch: Channel, *, mtu: int = MTU_BYTES,
+                 stream: int = 0) -> TransferResult:
+    """Unreliable transfer: back-to-back datagrams, no recovery."""
+    n = n_packets_for(n_bytes, mtu)
+    ser = ch.serialization_s(mtu)
+    lost = ch.loss_mask(n, stream)
+    delivered = ~lost
+    # last *delivered* packet determines perceived arrival; if everything is
+    # lost the receiver still waits out the stream (sender-clocked).
+    if delivered.any():
+        last = int(np.max(np.nonzero(delivered)[0]))
+    else:
+        last = n - 1
+    duration = (last + 1) * ser + ch.latency_s
+    return TransferResult(duration, n, n, delivered)
+
+
+def simulate_transfer(protocol: str, n_bytes: int, ch: Channel, *,
+                      stream: int = 0, **kw) -> TransferResult:
+    if protocol == "tcp":
+        return simulate_tcp(n_bytes, ch, stream=stream, **kw)
+    if protocol == "udp":
+        return simulate_udp(n_bytes, ch, stream=stream, **kw)
+    raise ValueError(f"unknown protocol {protocol!r}")

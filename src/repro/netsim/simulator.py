@@ -1,0 +1,133 @@
+"""The Split-Et-Impera simulator: supervisor / sensing / transmitter /
+netsim / receiver (paper §IV, Fig. 1-ii/iii).
+
+Inputs, matching the paper's list: (1) test scenario LC/RC/SC, (2-3) the
+trained model, (4) the test set, (5) the communication-network modelling
+parameters (protocol, channel latency, capacity, interface speed,
+saboteur).  Output: per-configuration latency and *measured* accuracy —
+under UDP the receiver zeroes the payload chunks of lost datagrams and the
+tail network runs on the corrupted tensor, so the accuracy degradation is
+real, not modelled.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bottleneck as B
+from repro.core.qos import Candidate, SimVerdict
+from repro.core.scenarios import Scenario, scenario_times_and_payload
+from .channel import Channel
+from .protocols import MTU_BYTES, simulate_transfer
+
+
+@dataclass(frozen=True)
+class NetworkConfig:
+    protocol: str                  # 'tcp' | 'udp'
+    channel: Channel
+    mtu: int = MTU_BYTES
+
+
+def chunk_mask_from_packets(n_elems: int, delivered: np.ndarray,
+                            elem_bytes: int, mtu: int) -> np.ndarray:
+    """Map per-packet delivery to a per-element keep mask (receiver view)."""
+    per_pkt = max(1, mtu // elem_bytes)
+    mask = np.ones(n_elems, bool)
+    for p in np.nonzero(~delivered)[0]:
+        mask[p * per_pkt:(p + 1) * per_pkt] = False
+    return mask
+
+
+class ApplicationSimulator:
+    """Drives n_frames of the sensing->transmit->receive->infer loop."""
+
+    def __init__(self, model, params, netcfg: NetworkConfig, *,
+                 ae=None, lc_model=None, lc_params=None, wire_dtype_bytes=4):
+        self.model, self.params = model, params
+        self.netcfg = netcfg
+        self.ae = ae
+        self.lc_model, self.lc_params = lc_model, lc_params
+        self.wire_dtype_bytes = wire_dtype_bytes
+
+    # -------------------------------------------------------- inference ----
+    def _apply_batched(self, fn, xs, masks, batch=64):
+        outs = []
+        for i in range(0, xs.shape[0], batch):
+            xb = xs[i:i + batch]
+            mb = None if masks is None else masks[i:i + batch]
+            outs.append(np.asarray(fn(xb, mb)))
+        return np.concatenate(outs)
+
+    def _accuracy(self, preds: np.ndarray, ys: np.ndarray) -> float:
+        return float((preds.argmax(-1) == ys).mean())
+
+    # -------------------------------------------------------- scenarios ----
+    def simulate(self, scenario: Scenario, xs: np.ndarray, ys: np.ndarray,
+                 n_frames: int = 32) -> SimVerdict:
+        ch = self.netcfg.channel
+        proto = self.netcfg.protocol
+        times = scenario_times_and_payload(
+            scenario, self.model, self.params,
+            input_bytes=int(np.prod(xs.shape[1:])) * 4, batch=1)
+
+        if scenario.kind == "LC":
+            model, params = self.lc_model or self.model, self.lc_params or self.params
+            fn = jax.jit(lambda xb: model.apply(params, xb))
+            preds = self._apply_batched(lambda xb, _: fn(xb), xs, None)
+            total_flops_t = times["edge_s"]
+            return SimVerdict(Candidate("LC", None), total_flops_t,
+                              self._accuracy(preds, ys),
+                              meta={"wire_bytes": 0, "transfers": []})
+
+        # transmission: simulate n_frames transfers (distinct loss draws)
+        frames = [simulate_transfer(proto, times["wire_bytes"], ch,
+                                    stream=f, mtu=self.netcfg.mtu)
+                  for f in range(n_frames)]
+        lat = (times["edge_s"] + times["server_s"]
+               + float(np.mean([t.duration_s for t in frames])))
+
+        # accuracy: TCP delivers everything; UDP corrupts the payload
+        if scenario.kind == "RC":
+            apply_clean = jax.jit(lambda xb: self.model.apply(self.params, xb))
+
+            def fn(xb, mb):
+                if mb is None:
+                    return apply_clean(xb)
+                return apply_clean(xb * mb.reshape(xb.shape))
+            n_elems = int(np.prod(xs.shape[1:]))
+        else:  # SC
+            split = scenario.split_plan.split_layer
+            z_shape = jax.eval_shape(
+                lambda x: B.head_forward(self.model, self.params, self.ae, split, x),
+                jax.ShapeDtypeStruct((1,) + tuple(xs.shape[1:]), jnp.float32)).shape
+            n_elems = int(np.prod(z_shape[1:]))
+            sc_fwd = jax.jit(lambda xb, mb: B.split_forward(
+                self.model, self.params, self.ae, split, xb,
+                None if mb is None else mb))
+
+            def fn(xb, mb):
+                if mb is None:
+                    return B.split_forward(self.model, self.params, self.ae, split, xb)
+                return sc_fwd(xb, mb.reshape((xb.shape[0],) + z_shape[1:]))
+
+        if proto == "tcp":
+            preds = self._apply_batched(lambda xb, _: fn(xb, None), xs, None)
+        else:
+            masks = np.stack([
+                chunk_mask_from_packets(
+                    n_elems, frames[i % n_frames].delivered,
+                    self.wire_dtype_bytes, self.netcfg.mtu)
+                for i in range(xs.shape[0])]).astype(np.float32)
+            preds = self._apply_batched(fn, xs, masks)
+
+        label = scenario.label()
+        return SimVerdict(Candidate(label, getattr(scenario.split_plan, "split_layer", None)),
+                          lat, self._accuracy(preds, ys),
+                          meta={"wire_bytes": times["wire_bytes"],
+                                "mean_tx": float(np.mean([t.n_transmissions for t in frames])),
+                                "edge_s": times["edge_s"],
+                                "server_s": times["server_s"]})

@@ -1,0 +1,62 @@
+"""Batched serving engine: prefill + decode over the zoo's ``serve_step``.
+
+Used by the end-to-end serving example (the paper is an inference-serving
+design framework, so the required end-to-end driver serves rather than
+trains) and by the decode-shape dry-runs.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as T
+from repro.models.common import ModelConfig
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray               # (S,) int32
+    max_new: int = 16
+    out: List[int] = field(default_factory=list)
+
+
+class ServingEngine:
+    """Static-batch engine: pad prompts, prefill once, decode greedily."""
+
+    def __init__(self, cfg: ModelConfig, params, *, cache_slots: int = 256,
+                 shard_fn=None):
+        self.cfg, self.params = cfg, params
+        self.cache_slots = cache_slots
+        self.shard_fn = shard_fn
+        self._decode = jax.jit(
+            lambda p, c, t, pos: T.serve_step(p, cfg, c, t, pos, shard_fn=shard_fn))
+
+    def run(self, requests: List[Request]) -> List[Request]:
+        cfg = self.cfg
+        b = len(requests)
+        max_prompt = max(len(r.prompt) for r in requests)
+        # left-pad prompts so last token aligns (static batch)
+        toks = np.zeros((b, max_prompt), np.int32)
+        for i, r in enumerate(requests):
+            toks[i, max_prompt - len(r.prompt):] = r.prompt
+        batch = {"tokens": jnp.asarray(toks)}
+        if cfg.family == "vlm":
+            batch["patch_embeds"] = jnp.zeros((b, cfg.n_patches, cfg.d_frontend), cfg.jdtype)
+        if cfg.family == "encdec":
+            batch["frames"] = jnp.zeros((b, cfg.n_frames, cfg.d_frontend), cfg.jdtype)
+        logits, cache, pos = T.prefill(self.params, cfg, batch, self.cache_slots,
+                                       shard_fn=self.shard_fn)
+        max_new = max(r.max_new for r in requests)
+        token = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+        for step in range(max_new):
+            for i, r in enumerate(requests):
+                if step < r.max_new:
+                    r.out.append(int(token[i, 0]))
+            logits, cache = self._decode(self.params, cache, token, pos + step)
+            token = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+        return requests

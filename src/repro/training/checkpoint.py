@@ -1,0 +1,43 @@
+"""Flat-npz checkpointing for arbitrary pytrees (no external deps)."""
+from __future__ import annotations
+
+import os
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def _to_numpy(x):
+    a = np.asarray(x)
+    if a.dtype.kind not in "fiub" or str(a.dtype) == "bfloat16":
+        a = a.astype(np.float32)   # bf16 etc: no native numpy representation
+    return a
+
+
+def save(path: str, tree) -> None:
+    leaves, treedef = _flatten(tree)
+    arrays = {f"leaf_{i}": _to_numpy(l) for i, l in enumerate(leaves)}
+    arrays["__treedef__"] = np.frombuffer(str(treedef).encode(), dtype=np.uint8)
+    tmp = path + ".tmp"
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    with open(tmp, "wb") as f:
+        np.savez(f, **arrays)
+    os.replace(tmp, path)
+
+
+def restore(path: str, like):
+    """Restore into the structure of ``like`` (shape/dtype checked)."""
+    import jax.numpy as jnp
+    with np.load(path) as data:
+        leaves, treedef = _flatten(like)
+        out = []
+        for i, ref in enumerate(leaves):
+            arr = data[f"leaf_{i}"]
+            assert arr.shape == ref.shape, (arr.shape, ref.shape)
+            out.append(jnp.asarray(arr).astype(ref.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)

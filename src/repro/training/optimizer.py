@@ -1,0 +1,97 @@
+"""Adam (+ optional weight decay) on arbitrary pytrees.
+
+Two flavours:
+  * ``adam_*``       — simple fp32 Adam used by the paper-core experiments
+                       (VGG/bottleneck training on CPU, §V hyperparams).
+  * ``AdamWState``   — mixed-precision trainer for the big zoo: bf16 params,
+                       configurable moment dtype (bf16 moments keep the
+                       qwen3-235B optimizer state inside v5e HBM, DESIGN §6).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+# ------------------------------------------------------------ simple Adam ----
+def adam_init(params):
+    z = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    return {"m": jax.tree.map(z, params), "v": jax.tree.map(z, params),
+            "t": jnp.zeros((), jnp.int32)}
+
+
+def adam_update(params, grads, state, lr, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                     state["m"], grads)
+    v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+                     state["v"], grads)
+    bc1 = 1 - b1 ** t.astype(jnp.float32)
+    bc2 = 1 - b2 ** t.astype(jnp.float32)
+    upd = jax.tree.map(lambda m, v: m / bc1 / (jnp.sqrt(v / bc2) + eps), m, v)
+    params = jax.tree.map(lambda p, u: (p.astype(jnp.float32) - lr * u).astype(p.dtype),
+                          params, upd)
+    return params, {"m": m, "v": v, "t": t}
+
+
+# -------------------------------------------------- mixed-precision AdamW ----
+@dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    moment_dtype: str = "float32"      # "bfloat16" halves optimizer HBM
+    master_fp32: bool = False          # fp32 master copy of bf16 params
+    grad_clip: Optional[float] = 1.0
+
+
+def adamw_init(params, cfg: OptConfig):
+    md = jnp.dtype(cfg.moment_dtype)
+    st = {"m": jax.tree.map(lambda p: jnp.zeros_like(p, md), params),
+          "v": jax.tree.map(lambda p: jnp.zeros_like(p, md), params),
+          "t": jnp.zeros((), jnp.int32)}
+    if cfg.master_fp32:
+        st["master"] = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+    return st
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(params, grads, state, cfg: OptConfig):
+    if cfg.grad_clip is not None:
+        gn = global_norm(grads)
+        scale = jnp.minimum(1.0, cfg.grad_clip / (gn + 1e-9))
+        grads = jax.tree.map(lambda g: g * scale.astype(g.dtype), grads)
+    t = state["t"] + 1
+    md = jnp.dtype(cfg.moment_dtype)
+    m = jax.tree.map(lambda m, g: (cfg.b1 * m.astype(jnp.float32)
+                                   + (1 - cfg.b1) * g.astype(jnp.float32)).astype(md),
+                     state["m"], grads)
+    v = jax.tree.map(lambda v, g: (cfg.b2 * v.astype(jnp.float32)
+                                   + (1 - cfg.b2) * jnp.square(g.astype(jnp.float32))).astype(md),
+                     state["v"], grads)
+    tf = t.astype(jnp.float32)
+    bc1, bc2 = 1 - cfg.b1 ** tf, 1 - cfg.b2 ** tf
+
+    def upd(m, v, p):
+        u = (m.astype(jnp.float32) / bc1) / (jnp.sqrt(v.astype(jnp.float32) / bc2) + cfg.eps)
+        if cfg.weight_decay:
+            u = u + cfg.weight_decay * p.astype(jnp.float32)
+        return u
+
+    src = state.get("master", params)
+    new_master = jax.tree.map(lambda p, m_, v_: p.astype(jnp.float32)
+                              - cfg.lr * upd(m_, v_, p), src, m, v)
+    new_params = jax.tree.map(lambda p, nm: nm.astype(p.dtype), params, new_master)
+    new_state = {"m": m, "v": v, "t": t}
+    if cfg.master_fp32:
+        new_state["master"] = new_master
+    return new_params, new_state

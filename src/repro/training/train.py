@@ -1,0 +1,39 @@
+"""Train-step factory for the zoo: loss -> grads -> AdamW, all shardable."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.models.common import ModelConfig
+from .optimizer import OptConfig, adamw_init, adamw_update
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: OptConfig, *, shard_fn=None):
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics)."""
+
+    def train_step(params, opt_state, batch):
+        def lf(p):
+            return T.loss_fn(p, cfg, batch, shard_fn=shard_fn)
+
+        (loss, metrics), grads = jax.value_and_grad(lf, has_aux=True)(params)
+        params, opt_state = adamw_update(params, grads, opt_state, opt_cfg)
+        metrics = dict(metrics, loss=loss)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def init_train_state(key, cfg: ModelConfig, opt_cfg: OptConfig):
+    params = T.init_params(key, cfg)
+    return params, adamw_init(params, opt_cfg)
+
+
+def train_state_struct(cfg: ModelConfig, opt_cfg: OptConfig):
+    """Abstract (no-allocation) train state for dry-runs."""
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    return jax.eval_shape(functools.partial(init_train_state, cfg=cfg,
+                                            opt_cfg=opt_cfg), key)

@@ -1,0 +1,30 @@
+import os
+import sys
+
+# make `repro` importable without installation
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="session")
+def vgg_small():
+    """A tiny trainable VGG + params (session-cached)."""
+    from repro.models.vgg import vgg_cifar
+    model = vgg_cifar(n_classes=8, input_hw=16, width_mult=0.25)
+    params = model.init(jax.random.PRNGKey(0))
+    return model, params
+
+
+@pytest.fixture(scope="session")
+def toy_data():
+    from repro.data.synthetic import toy_images
+    xs, ys = toy_images(64, hw=16, seed=0)
+    return xs, ys

@@ -1,0 +1,83 @@
+"""Unit tests for the transformer primitives."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import (apply_rope, attention, decode_attention,
+                                 repeat_kv, rmsnorm, rope_tables)
+
+
+def test_rmsnorm_scale_invariance():
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 64))
+    w = jnp.ones((64,))
+    y1, y2 = rmsnorm(x, w), rmsnorm(x * 10.0, w)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-4)
+
+
+def test_rmsnorm_unit_rms():
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, 128))
+    y = rmsnorm(x, jnp.ones((128,)))
+    rms = np.sqrt(np.mean(np.asarray(y) ** 2, -1))
+    np.testing.assert_allclose(rms, 1.0, atol=1e-3)
+
+
+def test_rope_preserves_norm_and_relative_property():
+    hd = 64
+    q = jax.random.normal(jax.random.PRNGKey(2), (1, 8, 2, hd))
+    cos, sin = rope_tables(jnp.arange(8), hd, 10000.0)
+    qr = apply_rope(q, cos, sin)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(qr), axis=-1),
+                               np.linalg.norm(np.asarray(q), axis=-1), rtol=1e-5)
+    # relative property: <R(p)q, R(p+d)k> depends only on d
+    k = jax.random.normal(jax.random.PRNGKey(3), (1, 8, 2, hd))
+    kr = apply_rope(k, cos, sin)
+    dots = np.einsum("bshd,bshd->bsh", np.asarray(qr)[:, :4], np.asarray(kr)[:, 1:5])
+    cos2, sin2 = rope_tables(jnp.arange(8) + 100, hd, 10000.0)
+    qr2, kr2 = apply_rope(q, cos2, sin2), apply_rope(k, cos2, sin2)
+    dots2 = np.einsum("bshd,bshd->bsh", np.asarray(qr2)[:, :4], np.asarray(kr2)[:, 1:5])
+    np.testing.assert_allclose(dots, dots2, atol=1e-3)
+
+
+def test_chunked_attention_matches_plain():
+    b, s, h, kh, d = 2, 1024, 4, 2, 64
+    ks = jax.random.split(jax.random.PRNGKey(4), 3)
+    q = jax.random.normal(ks[0], (b, s, h, d))
+    k = jax.random.normal(ks[1], (b, s, kh, d))
+    v = jax.random.normal(ks[2], (b, s, kh, d))
+    big = attention(q, k, v, causal=True, q_chunk=256, kv_chunk=256)  # chunked
+    small = attention(q[:, :512], k[:, :512], v[:, :512], causal=True)  # plain path
+    np.testing.assert_allclose(np.asarray(big[:, :512]), np.asarray(small),
+                               atol=2e-5)
+
+
+def test_attention_rows_convex_combination():
+    """softmax(QK)V stays inside the convex hull of V rows."""
+    b, s, h, d = 1, 128, 2, 32
+    ks = jax.random.split(jax.random.PRNGKey(5), 3)
+    q = jax.random.normal(ks[0], (b, s, h, d))
+    k = jax.random.normal(ks[1], (b, s, h, d))
+    v = jax.random.normal(ks[2], (b, s, h, d))
+    out = attention(q, k, v, causal=True)
+    assert float(jnp.abs(out).max()) <= float(jnp.abs(v).max()) + 1e-4
+
+
+def test_decode_attention_matches_full():
+    b, s, h, kh, d = 2, 16, 4, 2, 32
+    ks = jax.random.split(jax.random.PRNGKey(6), 3)
+    q = jax.random.normal(ks[0], (b, s, h, d))
+    k = jax.random.normal(ks[1], (b, s, kh, d))
+    v = jax.random.normal(ks[2], (b, s, kh, d))
+    full = attention(q, k, v, causal=True)
+    # last query token via decode path
+    kv_pos = jnp.broadcast_to(jnp.arange(s), (b, s))
+    dec = decode_attention(q[:, -1:], k, v, kv_pos, jnp.full((b,), s - 1))
+    np.testing.assert_allclose(np.asarray(dec[:, 0]), np.asarray(full[:, -1]),
+                               atol=1e-5)
+
+
+def test_repeat_kv():
+    k = jnp.arange(2 * 3 * 2 * 4).reshape(2, 3, 2, 4)
+    r = repeat_kv(k, 3)
+    assert r.shape == (2, 3, 6, 4)
+    np.testing.assert_array_equal(np.asarray(r[:, :, 0]), np.asarray(r[:, :, 2]))
+    np.testing.assert_array_equal(np.asarray(r[:, :, 3]), np.asarray(r[:, :, 5]))

@@ -1,0 +1,20 @@
+"""Multi-pod split pipeline correctness (runs in a subprocess because the
+device-count flag must be set before jax initialises)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+
+@pytest.mark.slow
+def test_multipod_pipeline_example():
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..", "src"))
+    script = os.path.join(os.path.dirname(__file__), "..", "examples",
+                          "multipod_pipeline.py")
+    out = subprocess.run([sys.executable, script], env=env, timeout=600,
+                         capture_output=True, text=True)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "max err 0.00e+00" in out.stdout

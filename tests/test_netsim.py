@@ -1,0 +1,85 @@
+"""Discrete-event network simulator tests (paper §IV)."""
+import numpy as np
+import pytest
+
+from repro.netsim.channel import Channel, INTERFACES
+from repro.netsim.events import EventQueue
+from repro.netsim.protocols import (n_packets_for, simulate_tcp, simulate_udp,
+                                    simulate_transfer)
+
+
+def test_event_queue_temporal_order():
+    q = EventQueue()
+    seen = []
+    q.schedule(2.0, lambda: seen.append("b"))
+    q.schedule(1.0, lambda: (seen.append("a"),
+                             q.schedule(1.5, lambda: seen.append("a2"))))
+    q.schedule(3.0, lambda: seen.append("c"))
+    q.run()
+    assert seen == ["a", "a2", "b", "c"]
+
+
+def _ch(loss=0.0, seed=0):
+    return Channel(latency_s=100e-6, capacity_bps=1e9,
+                   interface_bps=INTERFACES["gigabit"], loss_rate=loss, seed=seed)
+
+
+def test_tcp_delivers_everything():
+    r = simulate_tcp(100_000, _ch(loss=0.2))
+    assert r.delivered.all()
+    assert r.n_transmissions > r.n_packets  # retransmits happened
+
+
+def test_tcp_latency_grows_with_loss():
+    lats = [np.mean([simulate_tcp(150_000, _ch(loss=p, seed=s), stream=s).duration_s
+                     for s in range(8)]) for p in (0.0, 0.05, 0.15)]
+    assert lats[0] < lats[1] < lats[2], lats
+
+
+def test_tcp_zero_loss_matches_bandwidth_bound():
+    ch = _ch(loss=0.0)
+    n_bytes = 1_500_000
+    r = simulate_tcp(n_bytes, ch)
+    ideal = ch.serialization_s(n_bytes) + ch.latency_s
+    assert r.duration_s >= ideal * 0.95
+    assert r.duration_s <= ideal * 1.5  # windowing overhead is bounded
+
+
+def test_udp_latency_loss_independent():
+    durs = [simulate_udp(200_000, _ch(loss=p, seed=1)).duration_s
+            for p in (0.0, 0.1, 0.3)]
+    assert max(durs) - min(durs) < 0.2 * max(durs)
+
+
+def test_udp_loss_fraction_tracks_rate():
+    ch = _ch(loss=0.1, seed=3)
+    r = simulate_udp(3_000_000, ch)
+    assert abs(r.loss_fraction - 0.1) < 0.03
+
+
+def test_udp_faster_than_tcp_under_loss():
+    tcp = simulate_tcp(200_000, _ch(loss=0.1, seed=2))
+    udp = simulate_udp(200_000, _ch(loss=0.1, seed=2))
+    assert udp.duration_s < tcp.duration_s
+
+
+def test_determinism():
+    a = simulate_tcp(100_000, _ch(loss=0.1, seed=7), stream=4)
+    b = simulate_tcp(100_000, _ch(loss=0.1, seed=7), stream=4)
+    assert a.duration_s == b.duration_s and a.n_transmissions == b.n_transmissions
+
+
+def test_interface_speed_caps_channel():
+    fast_link = Channel(100e-6, 10e9, INTERFACES["fast-ethernet"], 0.0)
+    assert fast_link.effective_bps == 100e6
+
+
+def test_packetization():
+    assert n_packets_for(1) == 1
+    assert n_packets_for(1500) == 1
+    assert n_packets_for(1501) == 2
+
+
+def test_unknown_protocol():
+    with pytest.raises(ValueError):
+        simulate_transfer("sctp", 1000, _ch())

@@ -1,0 +1,102 @@
+"""Hypothesis property-based tests on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.saliency import local_maxima
+from repro.kernels import ref
+from repro.models.layers import rmsnorm
+from repro.netsim.channel import Channel
+from repro.netsim.protocols import simulate_tcp, simulate_udp
+from repro.netsim.simulator import chunk_mask_from_packets
+
+SET = dict(deadline=None, max_examples=25)
+
+
+@settings(**SET)
+@given(n_bytes=st.integers(1, 500_000), loss=st.floats(0, 0.3),
+       seed=st.integers(0, 100))
+def test_tcp_always_delivers(n_bytes, loss, seed):
+    ch = Channel(1e-4, 1e9, 1e9, loss_rate=loss, seed=seed)
+    r = simulate_tcp(n_bytes, ch)
+    assert r.delivered.all()
+    assert r.duration_s >= ch.serialization_s(min(n_bytes, 1500))
+
+
+@settings(**SET)
+@given(n_bytes=st.integers(1, 500_000), loss=st.floats(0, 0.9),
+       seed=st.integers(0, 100))
+def test_udp_duration_independent_of_delivery(n_bytes, loss, seed):
+    ch = Channel(1e-4, 1e9, 1e9, loss_rate=loss, seed=seed)
+    r = simulate_udp(n_bytes, ch)
+    full = ch.serialization_s(1500) * r.n_packets + ch.latency_s
+    assert r.duration_s <= full + 1e-12
+    assert 0.0 <= r.loss_fraction <= 1.0
+
+
+@settings(**SET)
+@given(n_elems=st.integers(1, 5000), elem_bytes=st.sampled_from([1, 2, 4]),
+       seed=st.integers(0, 50), loss=st.floats(0, 0.5))
+def test_chunk_mask_covers_all_elements(n_elems, elem_bytes, seed, loss):
+    rng = np.random.default_rng(seed)
+    import math
+    n_pkts = max(1, math.ceil(n_elems * elem_bytes / 1500))
+    delivered = rng.random(n_pkts) >= loss
+    mask = chunk_mask_from_packets(n_elems, delivered, elem_bytes, 1500)
+    assert mask.shape == (n_elems,)
+    if delivered.all():
+        assert mask.all()
+    if not delivered.any():
+        assert not mask.any()
+
+
+@settings(**SET)
+@given(data=st.lists(st.floats(-10, 10), min_size=3, max_size=40))
+def test_local_maxima_are_maxima(data):
+    arr = np.asarray(data)
+    for p in local_maxima(arr, tol=1e-9):
+        assert 0 < p < len(arr) - 1
+        left = arr[:p][::-1]
+        right = arr[p + 1:]
+        nl = next((x for x in left if abs(x - arr[p]) > 1e-9), None)
+        nr = next((x for x in right if abs(x - arr[p]) > 1e-9), None)
+        assert nl is None or nl < arr[p]
+        assert nr is None or nr < arr[p]
+
+
+@settings(**SET)
+@given(b=st.integers(1, 4), n=st.integers(1, 6), c=st.integers(1, 8))
+def test_rmsnorm_output_rms_is_one(b, n, c):
+    x = jax.random.normal(jax.random.PRNGKey(b * 100 + n), (b, 8 * c)) * n
+    y = rmsnorm(x, jnp.ones((8 * c,)))
+    rms = np.sqrt(np.mean(np.asarray(y) ** 2, -1))
+    np.testing.assert_allclose(rms, 1.0, atol=1e-2)
+
+
+@settings(**SET)
+@given(scale=st.floats(0.01, 10.0), seed=st.integers(0, 1000))
+def test_quantisation_bound_property(scale, seed):
+    """Dequantised wire payload is within amax/254 of the true latent."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+    f = jax.random.normal(ks[0], (8, 32)) * scale
+    w = jax.random.normal(ks[1], (32, 16)) * 0.2
+    q, s = ref.bottleneck_compress_ref(f, w, jnp.zeros((16,)))
+    z = jax.nn.relu(f @ w)
+    deq = ref.bottleneck_decompress_ref(q, s)
+    amax = np.asarray(jnp.max(jnp.abs(z), 1))
+    err = np.max(np.abs(np.asarray(deq) - np.asarray(z)), 1)
+    assert (err <= amax / 254.0 + 1e-6).all()
+
+
+@settings(**SET)
+@given(sq=st.sampled_from([32, 64]), sk=st.sampled_from([32, 64, 128]),
+       g=st.sampled_from([1, 2, 4]), seed=st.integers(0, 100))
+def test_attention_softmax_convexity(sq, sk, g, seed):
+    """Attention output is a convex combination of V rows."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (1, sq, 2 * g, 16))
+    k = jax.random.normal(ks[1], (1, sk, 2, 16))
+    v = jax.random.normal(ks[2], (1, sk, 2, 16))
+    out = ref.flash_attention_ref(q, k, v, causal=sq <= sk)
+    assert float(jnp.abs(out).max()) <= float(jnp.abs(v).max()) + 1e-4

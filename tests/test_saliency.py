@@ -1,0 +1,60 @@
+"""Saliency / CS-curve tests (paper §III core)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.saliency import (candidate_split_points, cumulative_saliency,
+                                 layer_saliency_maps, local_maxima)
+from repro.models.vgg import feature_index
+
+
+def test_cs_curve_shape_and_range(vgg_small, toy_data):
+    model, params = vgg_small
+    xs, ys = toy_data
+    fi = feature_index(model)
+    cs = cumulative_saliency(model, params, jnp.asarray(xs[:8]),
+                             jnp.asarray(ys[:8]), layer_idx=fi)
+    assert cs.shape == (len(fi),)
+    assert cs.min() >= 0.0 and cs.max() <= 1.0 + 1e-9
+    assert np.all(np.isfinite(cs))
+
+
+def test_saliency_maps_shapes(vgg_small, toy_data):
+    model, params = vgg_small
+    xs, ys = toy_data
+    maps = layer_saliency_maps(model, params, jnp.asarray(xs[:4]),
+                               jnp.asarray(ys[:4]))
+    assert len(maps) == len(model.layers)
+    # all resized to the largest spatial grid
+    assert maps[0].shape == (4, 16, 16)
+
+
+def test_saliency_model_dependence(vgg_small, toy_data):
+    """Sanity check (paper cites [20]): saliency must depend on the weights."""
+    model, params = vgg_small
+    xs, ys = toy_data
+    fi = feature_index(model)
+    cs1 = cumulative_saliency(model, params, jnp.asarray(xs[:8]),
+                              jnp.asarray(ys[:8]), layer_idx=fi)
+    params2 = model.init(jax.random.PRNGKey(42))
+    cs2 = cumulative_saliency(model, params2, jnp.asarray(xs[:8]),
+                              jnp.asarray(ys[:8]), layer_idx=fi)
+    assert np.abs(cs1 - cs2).max() > 1e-3
+
+
+def test_local_maxima_plateaus():
+    assert local_maxima(np.array([0., 1., 0., 2., 2., 2., 1., 3., 0.]),
+                        tol=1e-6) == [1, 4, 7]
+    assert local_maxima(np.array([3., 2., 1.])) == []
+    assert local_maxima(np.array([0., 1., 2.])) == []
+
+
+def test_candidate_split_points(vgg_small, toy_data):
+    model, params = vgg_small
+    xs, ys = toy_data
+    fi = feature_index(model)
+    cs = cumulative_saliency(model, params, jnp.asarray(xs[:8]),
+                             jnp.asarray(ys[:8]), layer_idx=fi)
+    cands = candidate_split_points(model, cs, fi, top_n=5)
+    legal = set(model.cut_points())
+    assert all(c in legal for c in cands)

@@ -1,0 +1,172 @@
+"""Sharding rules + HLO cost analyzer unit tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.configs.shapes import SHAPES, batch_struct, input_specs
+from repro.launch.hlo_cost import HloCost, parse_module
+from repro.launch.mesh import make_host_mesh
+from repro.models import transformer as T
+from repro.models.common import reduced
+from repro.sharding import rules
+
+
+def _fake_mesh_sizes():
+    """A 16x16-like mesh stand-in for spec resolution (no devices needed)."""
+    class FakeMesh:
+        axis_names = ("data", "model")
+        class devices:
+            shape = (16, 16)
+    return FakeMesh()
+
+
+def test_param_specs_divisibility():
+    mesh = _fake_mesh_sizes()
+    for arch in ("llama3-8b", "whisper-tiny", "qwen3-moe-235b-a22b"):
+        cfg = get_config(arch)
+        ps = jax.eval_shape(lambda k: T.init_params(k, cfg),
+                            jax.ShapeDtypeStruct((2,), jnp.uint32))
+        specs = rules.param_specs(ps, mesh)
+
+        def check(path, leaf, spec):
+            for dim, ax in zip(leaf.shape, spec):
+                if ax is not None:
+                    axes = ax if isinstance(ax, tuple) else (ax,)
+                    n = 1
+                    for a in axes:
+                        n *= dict(data=16, model=16, pod=2)[a]
+                    assert dim % n == 0, (path, leaf.shape, spec)
+        jax.tree_util.tree_map_with_path(check, ps, specs)
+
+
+def test_whisper_heads_fall_back_to_replicated():
+    mesh = _fake_mesh_sizes()
+    cfg = get_config("whisper-tiny")
+    ps = jax.eval_shape(lambda k: T.init_params(k, cfg),
+                        jax.ShapeDtypeStruct((2,), jnp.uint32))
+    specs = rules.param_specs(ps, mesh)
+    # d_model=384 divides 16? 384/16=24 -> yes on 'data'/'model' axes; but
+    # H*hd = 384 also divides; the kv_pos cache spec is the whisper risk
+    cache = jax.eval_shape(lambda: T.init_cache(cfg, 128, 100))
+    cspecs = rules.cache_specs(cache, mesh)
+    flat = jax.tree.leaves_with_path(cspecs) if hasattr(jax.tree, "leaves_with_path") else []
+    # cross-attn cache n_frames=1500 is not divisible by 16 -> None there
+    ck_spec = cspecs["l0"]["ck"]
+    assert ck_spec[2] is None
+
+
+def test_batch_specs_batch1_replicated():
+    mesh = _fake_mesh_sizes()
+    cfg = get_config("rwkv6-1.6b")
+    bs = batch_struct(cfg, SHAPES["long_500k"], with_labels=False)
+    specs = rules.batch_specs(bs, mesh)
+    assert specs["tokens"][0] is None  # batch=1 cannot shard
+
+
+def test_input_specs_cover_all_kinds():
+    for shape in SHAPES.values():
+        for arch in ("llama3-8b", "whisper-tiny", "internvl2-76b"):
+            cfg = get_config(arch)
+            specs = input_specs(cfg, shape)
+            assert isinstance(specs, dict) and specs
+
+
+def test_shard_fn_identity_on_host_mesh():
+    mesh = make_host_mesh()
+    sf = rules.make_shard_fn(mesh)
+    x = jnp.ones((4, 8, 16))
+    np.testing.assert_array_equal(np.asarray(sf(x, "residual")), np.asarray(x))
+    np.testing.assert_array_equal(np.asarray(sf(x, "nonexistent-kind")), np.asarray(x))
+
+
+# ----------------------------------------------------- HLO cost analyzer ----
+def test_hlo_cost_counts_scan_trip():
+    """Analyzer must match hand-count on scan+remat (XLA raw is ~8x off)."""
+    D, L, B = 128, 4, 16
+
+    def loss(ws, x):
+        def body(c, w):
+            return jnp.tanh(c @ w), None
+        y, _ = jax.lax.scan(
+            jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable),
+            x, ws)
+        return jnp.sum(y ** 2)
+
+    ws = jnp.ones((L, D, D))
+    x = jnp.ones((B, D))
+    c = jax.jit(jax.grad(loss)).lower(ws, x).compile()
+    hc = HloCost(c.as_text())
+    exact = 8 * L * B * D * D   # fwd + recompute + 2 bwd matmuls
+    assert abs(hc.flops - exact) / exact < 0.05
+    raw = c.cost_analysis()["flops"]
+    assert raw < exact / 2      # demonstrates why the analyzer exists
+
+
+def test_hlo_parse_module_structure():
+    def f(x):
+        return (x @ x.T).sum()
+    c = jax.jit(f).lower(jnp.ones((32, 32))).compile()
+    comps, entry, symtab = parse_module(c.as_text())
+    assert entry in comps
+    assert symtab
+
+
+def test_collective_parse_on_sharded_program():
+    if len(jax.devices()) < 1:
+        pytest.skip("no devices")
+    mesh = make_host_mesh()
+    from jax.sharding import NamedSharding
+
+    def f(a, b):
+        return (a @ b).sum()
+
+    sh = NamedSharding(mesh, P(None, "model"))
+    a = jax.ShapeDtypeStruct((64, 64), jnp.float32, sharding=sh)
+    b = jax.ShapeDtypeStruct((64, 64), jnp.float32, sharding=sh)
+    comp = jax.jit(f, in_shardings=(sh, sh)).lower(a, b).compile()
+    hc = HloCost(comp.as_text())
+    assert hc.flops > 0
+
+
+def test_inference_profile_replicates_over_data():
+    mesh = _fake_mesh_sizes()
+    cfg = get_config("llama3-8b")
+    ps = jax.eval_shape(lambda k: T.init_params(k, cfg),
+                        jax.ShapeDtypeStruct((2,), jnp.uint32))
+    train_specs = rules.param_specs(ps, mesh, profile="train")
+    inf_specs = rules.param_specs(ps, mesh, profile="inference")
+    t_leaves = jax.tree.leaves(train_specs, is_leaf=lambda s: isinstance(s, P))
+    i_leaves = jax.tree.leaves(inf_specs, is_leaf=lambda s: isinstance(s, P))
+    assert any("data" in str(s) for s in t_leaves)
+    assert not any("data" in str(s) for s in i_leaves)
+    assert any("model" in str(s) for s in i_leaves)
+
+
+def test_hlo_scope_bytes_attribution():
+    """flash_attention HBM bytes are scope-tagged for the kernel-adjusted
+    roofline term."""
+    from repro.models.layers import attention
+
+    q = jnp.ones((1, 1024, 4, 64))
+    k = jnp.ones((1, 1024, 2, 64))
+    v = jnp.ones((1, 1024, 2, 64))
+    c = jax.jit(lambda q, k, v: attention(q, k, v, causal=True)).lower(
+        q, k, v).compile()
+    hc = HloCost(c.as_text())
+    assert hc.scope_bytes.get("flash_attention", 0) > 0
+    assert hc.scope_bytes["flash_attention"] <= hc.bytes + 1e-6
+
+
+def test_head_seq_fallback_changes_spec():
+    mesh = _fake_mesh_sizes()
+    # 24 heads don't divide 16: baseline drops the constraint, fallback
+    # shards the sequence dim instead
+    sizes = rules.mesh_axis_sizes(mesh)
+    dp = "data"
+    cands = rules.ACT_SPECS["heads"](dp)
+    shape = (32, 4096, 24, 128)
+    assert not rules._fits(tuple(cands[0]), shape, sizes)
+    assert rules._fits(tuple(cands[1]), shape, sizes)

@@ -1,0 +1,82 @@
+"""Split execution + bottleneck AE tests (paper §III Eqs. 3-4)."""
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bottleneck as B
+from repro.core.split import SplitPlan, legal_cuts, wire_payload_bytes
+
+
+def test_split_without_ae_is_identity(vgg_small, toy_data):
+    model, params = vgg_small
+    xs, _ = toy_data
+    x = jnp.asarray(xs[:4])
+    full = model.apply(params, x)
+    for cut in model.cut_points()[::5]:
+        y = B.split_forward(model, params, None, cut, x)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(full), atol=1e-5)
+
+
+def test_bottleneck_shapes_and_compression(vgg_small, toy_data):
+    model, params = vgg_small
+    xs, _ = toy_data
+    x = jnp.asarray(xs[:4])
+    cut = model.cut_points()[4]
+    f = model.apply_range(params, x, 0, cut + 1)
+    ae = B.init_bottleneck(jax.random.PRNGKey(0), f.shape[1:], rate=0.5)
+    z = B.encode(ae, f)
+    assert z.shape[-1] == B.latent_channels(f.shape[-1], 0.5)
+    r = B.reconstruct(ae, f)
+    assert r.shape == f.shape
+    y = B.split_forward(model, params, ae, cut, x)
+    assert y.shape == (4, model.n_classes)
+
+
+def test_corrupt_mask_changes_output(vgg_small, toy_data):
+    model, params = vgg_small
+    xs, _ = toy_data
+    x = jnp.asarray(xs[:2])
+    cut = model.cut_points()[3]
+    f = model.apply_range(params, x, 0, cut + 1)
+    ae = B.init_bottleneck(jax.random.PRNGKey(0), f.shape[1:], rate=0.5)
+    clean = B.split_forward(model, params, ae, cut, x)
+    z_shape = B.encode(ae, f).shape
+    mask = jnp.ones(z_shape).at[:, ..., : z_shape[-1] // 2].set(0.0)
+    corrupted = B.split_forward(model, params, ae, cut, x, corrupt_mask=mask)
+    assert float(jnp.abs(clean - corrupted).max()) > 1e-4
+
+
+def test_train_bottleneck_reduces_loss(vgg_small):
+    from repro.data.synthetic import toy_image_iter
+    model, params = vgg_small
+    it = toy_image_iter(16, hw=16, seed=1)
+    it = map(lambda t: (jnp.asarray(t[0]), jnp.asarray(t[1])), it)
+    cut = model.cut_points()[4]
+    ae, losses = B.train_bottleneck(model, params, cut, it, steps=30, lr=1e-3)
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) * 0.8, losses[:3] + losses[-3:]
+
+
+def test_payload_bytes_and_plan(vgg_small):
+    model, params = vgg_small
+    plan = SplitPlan(split_layer=model.cut_points()[2], compression=0.5)
+    nb = wire_payload_bytes(model, params, plan, batch=1)
+    assert nb > 0
+    # halving compression halves payload (up to channel rounding)
+    plan2 = SplitPlan(split_layer=plan.split_layer, compression=0.25)
+    nb2 = wire_payload_bytes(model, params, plan2, batch=1)
+    assert nb2 < nb
+    assert plan.describe(model)
+    assert legal_cuts(model) == model.cut_points()
+
+
+def test_finetune_runs(vgg_small):
+    from repro.data.synthetic import toy_image_iter
+    model, params = vgg_small
+    it = map(lambda t: (jnp.asarray(t[0]), jnp.asarray(t[1])),
+             toy_image_iter(8, hw=16, seed=2))
+    cut = model.cut_points()[4]
+    ae, _ = B.train_bottleneck(model, params, cut, it, steps=3, lr=1e-3)
+    p2, ae2, losses = B.finetune(model, params, ae, cut, it, steps=3, lr=1e-4)
+    assert all(np.isfinite(l) for l in losses)

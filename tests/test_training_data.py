@@ -1,0 +1,86 @@
+"""Training substrate: optimizer, loss goes down, checkpoint round-trip,
+synthetic data sanity."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.data.synthetic import toy_images, token_batch, token_iter
+from repro.models import transformer as T
+from repro.models.common import reduced
+from repro.training import checkpoint as ckpt
+from repro.training.optimizer import (OptConfig, adam_init, adam_update,
+                                      adamw_init, adamw_update, global_norm)
+from repro.training.train import make_train_step, init_train_state
+
+
+def test_adam_converges_quadratic():
+    params = {"x": jnp.asarray([5.0, -3.0])}
+    opt = adam_init(params)
+    for _ in range(300):
+        g = jax.grad(lambda p: jnp.sum(p["x"] ** 2))(params)
+        params, opt = adam_update(params, g, opt, lr=0.05)
+    assert float(jnp.abs(params["x"]).max()) < 0.05
+
+
+def test_adamw_weight_decay_shrinks():
+    oc = OptConfig(lr=0.1, weight_decay=0.1, grad_clip=None)
+    params = {"w": jnp.ones((4,)) * 10}
+    st = adamw_init(params, oc)
+    zero_g = {"w": jnp.zeros((4,))}
+    p2, _ = adamw_update(params, zero_g, st, oc)
+    assert float(p2["w"][0]) < 10.0
+
+
+def test_grad_clip():
+    oc = OptConfig(lr=1.0, grad_clip=1.0)
+    g = {"w": jnp.ones((100,)) * 100}
+    assert float(global_norm(g)) > 1.0
+
+
+def test_lm_training_loss_decreases():
+    cfg = reduced(get_config("llama3.2-3b"), vocab=64, n_layers=2)
+    oc = OptConfig(lr=3e-3)
+    params, opt = init_train_state(jax.random.PRNGKey(0), cfg, oc)
+    step = jax.jit(make_train_step(cfg, oc))
+    it = token_iter(8, 32, cfg.vocab, seed=0)
+    losses = []
+    for i in range(40):
+        b = next(it)
+        params, opt, m = step(params, opt, {k: jnp.asarray(v) for k, v in b.items()})
+        losses.append(float(m["loss"]))
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.3, losses[::8]
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6).reshape(2, 3).astype(jnp.bfloat16),
+            "b": [jnp.ones((4,)), {"c": jnp.zeros((2, 2), jnp.int32)}]}
+    path = os.path.join(tmp_path, "ck.npz")
+    ckpt.save(path, tree)
+    out = ckpt.restore(path, jax.tree.map(jnp.zeros_like, tree))
+    for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(x, np.float32),
+                                      np.asarray(y, np.float32))
+
+
+def test_toy_images_learnable_structure():
+    xs, ys = toy_images(32, hw=16, seed=0)
+    assert xs.shape == (32, 16, 16, 3) and np.isfinite(xs).all()
+    assert set(np.unique(ys)) <= set(range(8))
+    # different classes produce different mean silhouettes
+    m0 = xs[ys == ys[0]].mean(0)
+    other = ys[ys != ys[0]]
+    if len(other):
+        m1 = xs[ys == other[0]].mean(0)
+        assert np.abs(m0 - m1).mean() > 1e-3
+
+
+def test_token_batch_structure():
+    b = token_batch(4, 64, 97, seed=1)
+    assert b["tokens"].shape == (4, 64) and b["labels"].shape == (4, 64)
+    # labels are next-token shifted
+    det = (5 * b["tokens"][:, :-1] + 7) % 97
+    frac = (b["labels"][:, :-1] == det).mean()
+    assert frac > 0.6  # 80% deterministic by construction
