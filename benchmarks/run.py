@@ -17,6 +17,7 @@ SECTIONS = {
     "fig3": "benchmarks.bench_split_latency",
     "fig4": "benchmarks.bench_protocol",
     "micro": "benchmarks.bench_micro",
+    "fleet": "benchmarks.bench_fleet",
     "roofline": "benchmarks.roofline",
     # needs >=32 emulated devices; standalone: python -m benchmarks.bench_multipod_wire
     "multipod_wire": "benchmarks.bench_multipod_wire",

@@ -1,0 +1,137 @@
+"""Fleet-scale deployment planning: which splits for this *population*?
+
+The single-link examples (quickstart, protocol_selection) answer "which
+design for one client".  This one scales the question to a deployment:
+
+  1. train the model, compute the CS curve, pick candidate split points,
+  2. train bottleneck AEs for the top CS-ranked cuts,
+  3. describe the fleet — three device classes behind different channels —
+     and generate a 1000-request diurnal trace over the mix,
+  4. search split x protocol x batch x replicas per device class: accuracy
+     measured by ``netsim`` (real forwards on loss-corrupted tensors),
+     queueing by the ``fleet.cluster`` discrete-event model (both on the
+     one shared ``EventQueue`` implementation),
+  5. print the per-class Pareto front over (p99, accuracy, server FLOPs/s),
+  6. ``suggest()`` one QoS-feasible plan per class and jointly validate
+     the chosen plans against the mixed trace on shared replicas.
+
+Run:  PYTHONPATH=src python examples/fleet_planning.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import trained_vgg, vgg_test_accuracy
+from repro.core import bottleneck as B
+from repro.core.qos import QoSRequirements
+from repro.core.saliency import candidate_split_points, cumulative_saliency
+from repro.data.synthetic import toy_image_iter, toy_images
+from repro.fleet import DeviceClass, DeploymentPlanner, SearchSpace, generate_trace
+from repro.fleet.planner import simulate_deployment
+from repro.models.vgg import feature_index
+from repro.netsim.channel import Channel, INTERFACES
+
+
+def main():
+    print("== 1. model + CS curve ==")
+    model, params = trained_vgg(steps=300)
+    print(f"   test accuracy: {vgg_test_accuracy(model, params):.3f}")
+    xs, ys = toy_images(64, hw=16, seed=55)
+    fi = feature_index(model)
+    cs = cumulative_saliency(model, params, jnp.asarray(xs), jnp.asarray(ys),
+                             layer_idx=fi)
+    cands = candidate_split_points(model, cs, fi, top_n=3)
+    if not cands:
+        cands = [sp for sp in fi if sp in set(model.cut_points())][2:8:2]
+    print(f"   candidate split points: {cands}")
+
+    print("== 2. bottleneck AEs for the top cuts ==")
+    ae_map = {}
+    it = map(lambda t: (jnp.asarray(t[0]), jnp.asarray(t[1])),
+             toy_image_iter(32, hw=16, seed=9))
+    for cut in cands[:2]:
+        ae_map[cut], _ = B.train_bottleneck(model, params, cut, it,
+                                            steps=150, lr=2e-3)
+
+    print("== 3. the fleet: 3 device classes, 1000-request diurnal trace ==")
+    mix = [
+        DeviceClass.make("mcu",
+                         Channel(2e-3, 10e6, 10e6, loss_rate=0.08, seed=1),
+                         weight=2.0),
+        DeviceClass.make("edge-embedded",
+                         Channel(5e-4, INTERFACES["fast-ethernet"],
+                                 INTERFACES["fast-ethernet"],
+                                 loss_rate=0.02, seed=2),
+                         weight=1.5),
+        DeviceClass.make("edge-accelerator",
+                         Channel(1e-4, INTERFACES["gigabit"],
+                                 INTERFACES["gigabit"], seed=3),
+                         weight=1.0),
+    ]
+    trace = generate_trace(mix, 1000, 400.0, pattern="diurnal", seed=42)
+    for d in mix:
+        sub = trace.for_device(d.name)
+        print(f"   {d.name:18s} {len(sub.requests):4d} requests "
+              f"({len(sub.requests) / len(trace.requests):.0%}), "
+              f"loss {d.channel.loss_rate:.0%}")
+    print(f"   horizon {trace.horizon_s:.2f} s, "
+          f"mean rate {trace.mean_rate_hz():.0f} req/s")
+
+    print("== 4. search split x protocol x batch x replicas ==")
+    lc_model, lc_params = trained_vgg(steps=30)
+    planner = DeploymentPlanner(model, params, cs_curve=cs, layer_idx=fi,
+                                ae_map=ae_map, eval_data=(xs[:32], ys[:32]),
+                                lc_model=lc_model, lc_params=lc_params)
+    space = SearchSpace(split_points=tuple(cands),
+                        protocols=("tcp", "udp"),
+                        batch_sizes=(1, 8, 32),
+                        replica_counts=(1, 2),
+                        top_k_splits=2, include_rc=True, include_lc=True)
+    points = planner.search(trace, mix, space)
+    print(f"   evaluated {len(points)} deployment options")
+
+    qos = QoSRequirements(max_latency_s=0.05, min_accuracy=0.5)
+    print(f"== 5. Pareto front (QoS: p99 <= {qos.max_latency_s * 1e3:.0f} ms, "
+          f"accuracy >= {qos.min_accuracy}) ==")
+    hdr = (f"   {'device':18s} {'design':7s} {'proto':5s} {'b':>3s} {'r':>2s} "
+           f"{'p50 ms':>8s} {'p99 ms':>8s} {'acc':>6s} {'srv GFLOP/s':>12s}  qos")
+    print(hdr)
+    for p in planner.pareto_front(points):
+        print(f"   {p.device:18s} {p.label:7s} {str(p.protocol):5s} "
+              f"{p.max_batch:3d} {p.n_replicas:2d} {p.p50_s * 1e3:8.2f} "
+              f"{p.p99_s * 1e3:8.2f} {p.accuracy:6.3f} "
+              f"{p.server_flops_per_s / 1e9:12.2f}  "
+              f"{'YES' if p.satisfies(qos) else 'no'}")
+
+    print("== 6. suggested per-class plans + joint validation ==")
+    plans = planner.suggest(qos, (trace, mix), space, points=points)
+    feasible = 0
+    for name, p in plans.items():
+        if p is None:
+            print(f"   {name:18s} -> no feasible design (relax QoS or "
+                  f"change the network)")
+        else:
+            feasible += 1
+            print(f"   {name:18s} -> {p.label} over {p.protocol}, "
+                  f"batch {p.max_batch}, {p.n_replicas} replica(s): "
+                  f"p99 {p.p99_s * 1e3:.2f} ms, acc {p.accuracy:.3f}")
+    report = simulate_deployment(plans, trace, mix, planner)
+    for (split, b, r, _w), g in sorted(report.items(),
+                                       key=lambda kv: str(kv[0])):
+        print(f"   shared cluster split={split} batch={b} replicas={r}: "
+              f"{g['n_served']} served from {', '.join(g['devices'])} | "
+              f"p50 {g['p50_s'] * 1e3:.2f} ms, p99 {g['p99_s'] * 1e3:.2f} ms, "
+              f"mean batch {g['mean_batch']:.1f}, "
+              f"util {g['utilization']:.0%}, drops {g['drop_fraction']:.1%}")
+    print(f"\nFEASIBLE DEPLOYMENTS: {feasible}/{len(mix)} device classes")
+    if feasible == 0:
+        raise SystemExit("no QoS-feasible deployment found")
+
+
+if __name__ == "__main__":
+    main()

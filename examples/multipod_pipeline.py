@@ -28,8 +28,8 @@ from repro.models.common import reduced
 
 def main():
     assert len(jax.devices()) >= 8, "needs --xla_force_host_platform_device_count=8"
-    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    from repro.launch.mesh import make_mesh_compat
+    mesh = make_mesh_compat((2, 2, 2), ("pod", "data", "model"))
     cfg = reduced(get_config("llama3-8b"), n_layers=4, dtype="float32")
     params = T.init_params(jax.random.PRNGKey(0), cfg)
     tokens = jax.random.randint(jax.random.PRNGKey(1), (8, 16), 0, cfg.vocab)

@@ -42,8 +42,13 @@ def rank_candidates(cs_curve, layer_idx: Sequence[int],
                     split_points: Sequence[int],
                     include_lc_rc: bool = True) -> list:
     """Output i: candidates ordered by presumed accuracy (CS at the cut)."""
-    li = list(layer_idx)
-    cands = [Candidate(f"SC@{sp}", sp, float(cs_curve[li.index(sp)]))
+    pos = {sp: i for i, sp in enumerate(layer_idx)}
+    missing = [sp for sp in split_points if sp not in pos]
+    if missing:
+        raise ValueError(
+            f"split points {missing} have no CS value: not in layer_idx "
+            f"{sorted(pos)} — pass the layer_idx the curve was computed over")
+    cands = [Candidate(f"SC@{sp}", sp, float(cs_curve[pos[sp]]))
              for sp in split_points]
     cands.sort(key=lambda c: -c.accuracy_proxy)
     if include_lc_rc:
@@ -63,9 +68,28 @@ def suggest(verdicts: Sequence[SimVerdict], qos: QoSRequirements) -> Optional[Si
 
 def pareto(verdicts: Sequence[SimVerdict]) -> list:
     """Accuracy/latency Pareto frontier over simulated designs."""
-    front = []
-    for v in verdicts:
-        if not any(o.accuracy >= v.accuracy and o.latency_s <= v.latency_s
-                   and o is not v for o in verdicts):
-            front.append(v)
+    keyed = [(v, (v.latency_s, -v.accuracy)) for v in verdicts]
+    front = [v for v, _ in pareto_nd(keyed)]
     return sorted(front, key=lambda v: v.latency_s)
+
+
+def pareto_nd(items: Sequence[tuple]) -> list:
+    """N-objective Pareto filter over ``(payload, objectives)`` pairs.
+
+    Every objective is minimised (negate the ones you maximise).  An item
+    survives unless some other item is <= on every objective and strictly
+    < on at least one.  Duplicated objective vectors all survive.
+    """
+    out = []
+    for i, (_, obj) in enumerate(items):
+        dominated = False
+        for j, (_, other) in enumerate(items):
+            if j == i:
+                continue
+            if (all(o <= s for o, s in zip(other, obj))
+                    and any(o < s for o, s in zip(other, obj))):
+                dominated = True
+                break
+        if not dominated:
+            out.append(items[i])
+    return out

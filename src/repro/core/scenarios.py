@@ -38,6 +38,20 @@ PLATFORMS = {
     "tpu-v5e-chip": PlatformProfile("tpu-v5e-chip", 0.4 * 197e12),
 }
 
+# Sensing-side platforms a deployed fleet is made of (``repro.fleet`` draws
+# its heterogeneous device mix from these).
+EDGE_PLATFORM_NAMES = ("mcu", "edge-embedded", "edge-accelerator")
+
+
+def edge_platform(name: str) -> PlatformProfile:
+    """Resolve an edge platform by name with a diagnosable failure."""
+    if name not in PLATFORMS:
+        raise KeyError(f"unknown platform {name!r}; known: {sorted(PLATFORMS)}")
+    if name not in EDGE_PLATFORM_NAMES:
+        raise KeyError(f"{name!r} is a server platform, not an edge device "
+                       f"class; edge classes: {EDGE_PLATFORM_NAMES}")
+    return PLATFORMS[name]
+
 
 class HILPlatform:
     """Hardware-in-the-loop platform (paper §IV): instead of the analytic
@@ -86,7 +100,7 @@ class Scenario:
 def scenario_times_and_payload(scenario: Scenario, model, params,
                                input_bytes: int, batch: int = 1) -> dict:
     """(edge_time, server_time, wire_bytes) for one inference frame."""
-    total_flops = sum(r.mult_adds for r in S.summary(model, params, batch)) * 2
+    total_flops = S.total_flops(model, params, batch)
     if scenario.kind == "LC":
         return {"edge_s": scenario.edge.compute_time(total_flops),
                 "server_s": 0.0, "wire_bytes": 0}

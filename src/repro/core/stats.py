@@ -70,6 +70,13 @@ def totals(model: LayeredModel, params, batch: int = 16,
     }
 
 
+def total_flops(model: LayeredModel, params, batch: int = 1) -> float:
+    """Whole-model forward FLOPs (2x mult-adds) — the single counting
+    convention shared by the scenario timing model and the serving cost
+    model."""
+    return sum(r.mult_adds for r in summary(model, params, batch)) * 2
+
+
 def flops_split(model: LayeredModel, params, split_layer: int,
                 batch: int = 1) -> tuple:
     """(head_flops, tail_flops) for a cut after ``split_layer`` (2x mult-adds)."""

@@ -1,0 +1,8 @@
+"""Fleet-scale simulation and planning: traffic generation over a
+heterogeneous device mix, a discrete-event serving cluster, and a
+QoS-aware deployment planner (which splits for this *population*)."""
+from .traffic import (ARRIVAL_PATTERNS, DeviceClass, FleetRequest,  # noqa: F401
+                      Trace, generate_trace)
+from .cluster import ClusterConfig, ClusterSim, ClusterStats        # noqa: F401
+from .planner import (DeploymentPlanner, PlanPoint, SearchSpace,    # noqa: F401
+                      simulate_deployment)

@@ -1,0 +1,151 @@
+"""Discrete-event cluster model: admission queue, dynamic batching,
+replicas.
+
+One server deployment = ``n_replicas`` identical replicas, each costed by
+the :class:`repro.serving.engine.BatchCostModel` (fixed per-batch
+dispatch/prefill overhead + per-item FLOPs at the platform's effective
+throughput).  Requests land in a bounded FIFO admission queue; a dynamic
+batching window collects them — a batch dispatches the moment it is full
+(the window timer is *cancelled*, exercising the shared engine's event
+handles) or when the window expires with work waiting.
+
+Runs on the same :class:`repro.netsim.events.EventQueue` the transport
+models use — there is a single event-loop implementation in the repo, and
+a cluster can be embedded in an outer simulation by passing its queue in.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+from repro.netsim.events import EventQueue
+from repro.serving.engine import BatchCostModel
+
+
+@dataclass(frozen=True)
+class ClusterConfig:
+    n_replicas: int = 1
+    max_batch: int = 8
+    batch_window_s: float = 2e-3     # dynamic batching window
+    queue_limit: int = 4096          # admission queue bound (then: drop)
+
+
+@dataclass
+class RequestRecord:
+    rid: int
+    t_offer: float                   # arrival at the admission queue
+    t_dispatch: float = -1.0
+    t_done: float = -1.0
+    dropped: bool = False
+
+    @property
+    def latency_s(self) -> float:    # queue wait + batch service
+        assert self.t_done >= 0, "request not served"
+        return self.t_done - self.t_offer
+
+    @property
+    def wait_s(self) -> float:
+        assert self.t_dispatch >= 0, "request not dispatched"
+        return self.t_dispatch - self.t_offer
+
+
+@dataclass
+class ClusterStats:
+    served: list = field(default_factory=list)    # RequestRecord
+    dropped: int = 0
+    batches: int = 0
+    busy_s: float = 0.0
+
+    def latencies(self) -> np.ndarray:
+        return np.array([r.latency_s for r in self.served])
+
+    def percentile(self, p: float) -> float:
+        lat = self.latencies()
+        return float(np.percentile(lat, p)) if len(lat) else float("nan")
+
+    def drop_fraction(self) -> float:
+        n = len(self.served) + self.dropped
+        return self.dropped / n if n else 0.0
+
+    def mean_batch(self) -> float:
+        return len(self.served) / self.batches if self.batches else 0.0
+
+    def utilization(self, n_replicas: int, horizon_s: float) -> float:
+        return self.busy_s / (n_replicas * horizon_s) if horizon_s > 0 else 0.0
+
+
+class ClusterSim:
+    """Offer requests with :meth:`offer`, then :meth:`run` the queue."""
+
+    def __init__(self, cost: BatchCostModel, cfg: ClusterConfig,
+                 queue: Optional[EventQueue] = None):
+        assert cfg.n_replicas >= 1 and cfg.max_batch >= 1
+        self.cost, self.cfg = cost, cfg
+        self.q = queue if queue is not None else EventQueue()
+        self.stats = ClusterStats()
+        self._waiting = []           # RequestRecord FIFO
+        self._free = cfg.n_replicas
+        self._window_timer = None    # live EventHandle or None
+        self._due = False            # window expired with work still waiting
+
+    # ------------------------------------------------------------ intake ----
+    def offer(self, rid: int, t_arrival: float) -> None:
+        self.q.schedule(t_arrival, lambda r=rid: self._on_arrival(r))
+
+    def offer_trace(self, arrivals) -> None:
+        """arrivals: iterable of (rid, t_arrival)."""
+        for rid, t in arrivals:
+            self.offer(rid, t)
+
+    def run(self, until: float = float("inf")) -> ClusterStats:
+        self.q.run(until=until)
+        return self.stats
+
+    # ------------------------------------------------------------ events ----
+    def _on_arrival(self, rid: int) -> None:
+        if len(self._waiting) >= self.cfg.queue_limit:
+            self.stats.dropped += 1
+            return
+        self._waiting.append(RequestRecord(rid, self.q.now))
+        if len(self._waiting) >= self.cfg.max_batch:
+            self._dispatch_ready()
+        elif self._window_timer is None and not self._due:
+            self._window_timer = self.q.schedule(
+                self.q.now + self.cfg.batch_window_s, self._on_window)
+
+    def _on_window(self) -> None:
+        self._window_timer = None
+        self._due = True
+        self._dispatch_ready()
+
+    def _dispatch_ready(self) -> None:
+        """Start batches while a replica is free and a batch is ready
+        (full, or the window has expired on a partial one)."""
+        while (self._free > 0 and self._waiting
+               and (self._due or len(self._waiting) >= self.cfg.max_batch)):
+            batch = self._waiting[:self.cfg.max_batch]
+            del self._waiting[:self.cfg.max_batch]
+            self._free -= 1
+            svc = self.cost.service_time(len(batch))
+            self.stats.batches += 1
+            self.stats.busy_s += svc
+            for r in batch:
+                r.t_dispatch = self.q.now
+            self.q.schedule(self.q.now + svc, lambda b=batch: self._on_done(b))
+        if not self._waiting:
+            self._due = False
+            if self._window_timer is not None:
+                self._window_timer.cancel()  # batch filled before the window
+                self._window_timer = None
+        # invariant: anything still waiting is covered by a live window
+        # timer, by _due (window already expired), or is a full batch that
+        # dispatches as soon as a replica frees up
+
+    def _on_done(self, batch) -> None:
+        self._free += 1
+        for r in batch:
+            r.t_done = self.q.now
+        self.stats.served.extend(batch)
+        self._dispatch_ready()

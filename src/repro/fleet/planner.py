@@ -1,0 +1,314 @@
+"""QoS-aware deployment planning over a fleet.
+
+Answers "which splits do I deploy for this *population* of clients", not
+"which split for this one client".  The search space is
+
+    split point x protocol x channel x batch size x replica count,
+
+pruned with ``core.qos.rank_candidates`` (CS-curve accuracy proxy), costed
+per flow with ``netsim`` (edge compute + simulated transfers + measured
+accuracy under loss) and per deployment with ``fleet.cluster`` (queueing +
+dynamic batching on the ``serving.engine`` replica cost model).  Output is
+a Pareto front over (p99 latency, accuracy, server FLOPs/s) and a
+``suggest(qos, fleet)`` API that picks one plan per device class.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.core.qos import QoSRequirements, pareto_nd, rank_candidates
+from repro.core.scenarios import PLATFORMS, Scenario
+from repro.core.split import SplitPlan
+from repro.fleet.cluster import ClusterConfig, ClusterSim
+from repro.fleet.traffic import DeviceClass, Trace
+from repro.netsim.simulator import (ApplicationSimulator, NetworkConfig,
+                                    measure_flow)
+from repro.serving.engine import BatchCostModel
+
+
+@dataclass(frozen=True)
+class SearchSpace:
+    split_points: tuple              # legal cut layers to consider
+    protocols: tuple = ("tcp", "udp")
+    batch_sizes: tuple = (1, 8)
+    replica_counts: tuple = (1, 2)
+    batch_window_s: float = 2e-3
+    top_k_splits: int = 2            # CS-ranked prune before simulation
+    include_rc: bool = True
+    include_lc: bool = False
+
+
+@dataclass(frozen=True)
+class PlanPoint:
+    """One evaluated deployment option for one device class."""
+    device: str
+    label: str                       # 'SC@k' | 'RC' | 'LC'
+    split_layer: Optional[int]
+    protocol: Optional[str]
+    max_batch: int
+    n_replicas: int
+    p50_s: float
+    p99_s: float
+    accuracy: float
+    server_flops_per_s: float
+    drop_fraction: float
+    batch_window_s: float = 0.0      # window the point was simulated under
+
+    def objectives(self) -> tuple:
+        """Minimised objective vector for the Pareto filter."""
+        return (self.p99_s, -self.accuracy, self.server_flops_per_s)
+
+    def satisfies(self, qos: QoSRequirements) -> bool:
+        return (self.p99_s <= qos.max_latency_s
+                and self.accuracy >= qos.min_accuracy
+                and self.drop_fraction == 0.0)
+
+
+class DeploymentPlanner:
+    """Searches deployments of ``model`` for a heterogeneous fleet.
+
+    ``ae_map`` maps split layer -> trained bottleneck AE (splits without an
+    entry ship the raw activation).  ``accuracy_fn(scenario, netcfg)``
+    overrides the measured-accuracy path (tests / analytic proxies);
+    without it, accuracy comes from ``ApplicationSimulator`` on
+    ``eval_data`` — real forwards on loss-corrupted tensors.
+    """
+
+    def __init__(self, model, params, *, cs_curve, layer_idx,
+                 ae_map=None, eval_data=None, accuracy_fn=None,
+                 lc_model=None, lc_params=None,
+                 server_platform=PLATFORMS["server-gpu"],
+                 input_bytes: Optional[int] = None, n_frames: int = 8):
+        if accuracy_fn is None and eval_data is None:
+            raise ValueError("need eval_data to measure accuracy "
+                             "(or pass accuracy_fn)")
+        if input_bytes is None and eval_data is None:
+            raise ValueError("need input_bytes when no eval_data is given "
+                             "(it is derived from the eval inputs otherwise)")
+        self.model, self.params = model, params
+        self.cs_curve, self.layer_idx = cs_curve, list(layer_idx)
+        self.ae_map = dict(ae_map or {})
+        self.eval_data = eval_data
+        self.accuracy_fn = accuracy_fn
+        self.lc_model, self.lc_params = lc_model, lc_params
+        self.server_platform = server_platform
+        if input_bytes is None:
+            xs = eval_data[0]
+            input_bytes = int(np.prod(xs.shape[1:])) * 4
+        self.input_bytes = input_bytes
+        self.n_frames = n_frames
+        self._flow_cache = {}
+        self._cost_cache = {}
+
+    # ------------------------------------------------------- candidates ----
+    def candidates(self, space: SearchSpace) -> list:
+        """(label, split_layer) list: CS-ranked SC cuts (pruned to top-k)
+        plus RC/LC per the space flags — core.qos ranking reused as-is."""
+        ranked = rank_candidates(self.cs_curve, self.layer_idx,
+                                 space.split_points, include_lc_rc=False)
+        out = [(c.label, c.split_layer) for c in ranked[:space.top_k_splits]]
+        if space.include_rc:
+            out.append(("RC", None))
+        if space.include_lc and self.lc_model is not None:
+            out.append(("LC", None))
+        return out
+
+    def _scenario(self, device: DeviceClass, label: str,
+                  split: Optional[int]) -> Scenario:
+        kind = label.split("@")[0]
+        plan = SplitPlan(split) if kind == "SC" else None
+        return Scenario(kind, plan, edge=device.platform,
+                        server=self.server_platform)
+
+    # ------------------------------------------------------ per-flow leg ----
+    def _flow(self, device: DeviceClass, label: str, split: Optional[int],
+              protocol: str) -> dict:
+        """Edge compute, wire-time samples and accuracy for one
+        (device class, candidate, protocol) leg — cached, since every
+        (batch, replicas) point shares it."""
+        key = (device.name, label, protocol)
+        if key in self._flow_cache:
+            return self._flow_cache[key]
+        scenario = self._scenario(device, label, split)
+        netcfg = NetworkConfig(protocol, device.channel)
+        flow = measure_flow(scenario, netcfg, self.model, self.params,
+                            self.input_bytes, n_frames=self.n_frames)
+        if self.accuracy_fn is not None:
+            acc = float(self.accuracy_fn(scenario, netcfg))
+        else:
+            xs, ys = self.eval_data
+            sim = ApplicationSimulator(
+                self.model, self.params, netcfg, ae=self.ae_map.get(split),
+                lc_model=self.lc_model, lc_params=self.lc_params)
+            # reuse this leg's transfer draws — don't re-simulate them
+            acc = sim.simulate(scenario, xs, ys, n_frames=self.n_frames,
+                               flow=flow).accuracy
+        flow["accuracy"] = acc
+        self._flow_cache[key] = flow
+        return flow
+
+    def _cost_model(self, split: Optional[int]) -> BatchCostModel:
+        if split not in self._cost_cache:
+            self._cost_cache[split] = BatchCostModel.for_split(
+                self.model, self.params, split, self.server_platform)
+        return self._cost_cache[split]
+
+    def default_space(self) -> SearchSpace:
+        """Every legal cut the CS curve covers, stock protocol/batch/replica
+        grids — what ``suggest`` uses when no space is given."""
+        legal = set(self.model.cut_points())
+        sps = tuple(sp for sp in self.layer_idx if sp in legal)
+        return SearchSpace(split_points=sps,
+                           include_lc=self.lc_model is not None)
+
+    # ------------------------------------------------------------ search ----
+    def search(self, trace: Trace, devices: Sequence[DeviceClass],
+               space: SearchSpace) -> list:
+        """Evaluate the whole space; returns one PlanPoint per combo."""
+        points = []
+        for device in devices:
+            sub = trace.for_device(device.name)
+            if not len(sub):
+                continue
+            for label, split in self.candidates(space):
+                if label == "LC":
+                    points.append(self._lc_point(device, sub))
+                    continue
+                for proto in space.protocols:
+                    if proto not in device.protocols:
+                        continue
+                    flow = self._flow(device, label, split, proto)
+                    for b, r in itertools.product(space.batch_sizes,
+                                                  space.replica_counts):
+                        points.append(self._cluster_point(
+                            device, sub, label, split, proto, flow,
+                            b, r, space.batch_window_s))
+        return points
+
+    def _lc_point(self, device: DeviceClass, sub: Trace) -> PlanPoint:
+        """All-edge: no queueing, no server FLOPs, LC-model accuracy."""
+        flow = self._flow(device, "LC", None, device.protocols[0])
+        lat = flow["edge_s"]
+        return PlanPoint(device.name, "LC", None, None, 0, 0,
+                         lat, lat, flow["accuracy"], 0.0, 0.0)
+
+    def _cluster_point(self, device: DeviceClass, sub: Trace, label: str,
+                       split: Optional[int], proto: str, flow: dict,
+                       max_batch: int, n_replicas: int,
+                       window_s: float) -> PlanPoint:
+        cost = self._cost_model(split)
+        sim = ClusterSim(cost, ClusterConfig(n_replicas, max_batch, window_s))
+        wire = flow["wire_s"]
+        # request i reaches the cluster after its edge compute + its own
+        # transfer draw (frames cycled, matching ApplicationSimulator)
+        t_server = {}
+        for i, req in enumerate(sub.requests):
+            pre = flow["edge_s"] + wire[i % len(wire)]
+            t_server[req.rid] = pre
+            sim.offer(req.rid, req.t_arrival + pre)
+        stats = sim.run()
+        lat = np.array([t_server[rec.rid] + rec.latency_s
+                        for rec in stats.served])
+        horizon = max(sub.horizon_s, 1e-9)
+        flops_rate = cost.flops_per_item * len(stats.served) / horizon
+        return PlanPoint(
+            device.name, label, split, proto, max_batch, n_replicas,
+            float(np.percentile(lat, 50)) if len(lat) else float("inf"),
+            float(np.percentile(lat, 99)) if len(lat) else float("inf"),
+            flow["accuracy"], flops_rate, stats.drop_fraction(),
+            batch_window_s=window_s)
+
+    # ------------------------------------------------------------ output ----
+    @staticmethod
+    def pareto_front(points: Sequence[PlanPoint]) -> list:
+        """Non-dominated set over (p99 latency, accuracy, server FLOPs/s),
+        per device class.  Ties on the whole objective vector keep only the
+        cheapest deployment (fewest replicas, then smallest batch)."""
+        front = []
+        for dev in sorted({p.device for p in points}):
+            best = {}
+            for p in points:
+                if p.device != dev:
+                    continue
+                obj = p.objectives()
+                cur = best.get(obj)
+                if cur is None or (p.n_replicas, p.max_batch) < (cur.n_replicas,
+                                                                 cur.max_batch):
+                    best[obj] = p
+            mine = [(p, obj) for obj, p in best.items()]
+            front.extend(p for p, _ in pareto_nd(mine))
+        return sorted(front, key=lambda p: (p.device, p.p99_s))
+
+    def suggest(self, qos: QoSRequirements, fleet,
+                space: Optional[SearchSpace] = None,
+                points: Optional[Sequence[PlanPoint]] = None) -> dict:
+        """Pick one deployment plan per device class.
+
+        ``fleet`` is ``(trace, device_classes)``.  Returns
+        ``{device_name: PlanPoint | None}`` — only QoS-feasible plans are
+        ever returned; ``None`` marks a class no searched plan can serve
+        (caller should relax QoS, add replicas, or change the network).
+        Pass ``points`` from an earlier :meth:`search` to skip
+        re-evaluating the space.
+        """
+        trace, devices = fleet
+        if points is None:
+            points = self.search(trace, devices,
+                                 space if space is not None
+                                 else self.default_space())
+        plans = {}
+        for d in devices:
+            ok = [p for p in points if p.device == d.name and p.satisfies(qos)]
+            # max accuracy, then min p99, then cheapest server
+            plans[d.name] = (max(ok, key=lambda p: (p.accuracy, -p.p99_s,
+                                                    -p.server_flops_per_s))
+                             if ok else None)
+        return plans
+
+
+def simulate_deployment(plans: dict, trace: Trace,
+                        devices: Sequence[DeviceClass],
+                        planner: DeploymentPlanner) -> dict:
+    """Joint validation: run the chosen per-class plans against the *mixed*
+    trace, sharing one cluster per (split, batch, replicas) group so device
+    classes genuinely contend for the same replicas.  Each group runs under
+    the batching window its plans were searched with.  Returns fleet-level
+    p50/p99 per group."""
+    by_dev = {d.name: d for d in devices}
+    groups = {}
+    for name, plan in plans.items():
+        if plan is None or plan.label == "LC":
+            continue
+        groups.setdefault((plan.split_layer, plan.max_batch,
+                           plan.n_replicas, plan.batch_window_s),
+                          []).append(plan)
+    out = {}
+    for (split, b, r, window_s), members in groups.items():
+        cost = planner._cost_model(split)
+        sim = ClusterSim(cost, ClusterConfig(r, b, window_s))
+        pre = {}
+        for plan in members:
+            device = by_dev[plan.device]
+            flow = planner._flow(device, plan.label, plan.split_layer,
+                                 plan.protocol)
+            sub = trace.for_device(plan.device)
+            for i, req in enumerate(sub.requests):
+                head = flow["edge_s"] + flow["wire_s"][i % len(flow["wire_s"])]
+                pre[req.rid] = head
+                sim.offer(req.rid, req.t_arrival + head)
+        stats = sim.run()
+        lat = np.array([pre[rec.rid] + rec.latency_s for rec in stats.served])
+        out[(split, b, r, window_s)] = {
+            "devices": sorted(p.device for p in members),
+            "n_served": len(stats.served),
+            "drop_fraction": stats.drop_fraction(),
+            "p50_s": float(np.percentile(lat, 50)) if len(lat) else float("inf"),
+            "p99_s": float(np.percentile(lat, 99)) if len(lat) else float("inf"),
+            "mean_batch": stats.mean_batch(),
+            "utilization": stats.utilization(r, trace.horizon_s),
+        }
+    return out

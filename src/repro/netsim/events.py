@@ -1,8 +1,15 @@
-"""Minimal discrete-event engine (the *supervisor* layer, paper §IV).
+"""The shared discrete-event engine (the *supervisor* layer, paper §IV).
+
+One implementation serves every simulator in the repo: the per-flow
+transport models in ``repro.netsim.protocols`` and the fleet-scale cluster
+model in ``repro.fleet.cluster`` both schedule onto this queue — there is
+deliberately no second event loop anywhere.
 
 Executes events in correct temporal order; callbacks may schedule further
 events.  Deterministic tie-breaking by insertion sequence keeps runs
-reproducible.
+reproducible.  ``schedule`` returns an :class:`EventHandle` so timers that
+become moot (TCP retransmission timeouts after the ACK, dynamic-batching
+windows that fill early) can be cancelled instead of firing dead.
 """
 from __future__ import annotations
 
@@ -10,26 +17,54 @@ import heapq
 from typing import Callable
 
 
+class EventHandle:
+    """Cancellation token for a scheduled event."""
+
+    __slots__ = ("time", "seq", "cancelled")
+
+    def __init__(self, time: float, seq: int):
+        self.time = time
+        self.seq = seq
+        self.cancelled = False
+
+    def cancel(self) -> None:
+        self.cancelled = True
+
+
 class EventQueue:
     def __init__(self):
         self._q = []
         self._seq = 0
         self.now = 0.0
+        self.n_fired = 0          # events executed (cancelled ones excluded)
+        self.n_cancelled = 0
 
-    def schedule(self, time: float, fn: Callable[[], None]) -> None:
+    def schedule(self, time: float, fn: Callable[[], None]) -> EventHandle:
         assert time >= self.now - 1e-12, (time, self.now)
-        heapq.heappush(self._q, (time, self._seq, fn))
+        h = EventHandle(time, self._seq)
+        heapq.heappush(self._q, (time, self._seq, fn, h))
         self._seq += 1
+        return h
+
+    def peek(self) -> float:
+        """Time of the next live event (inf when drained)."""
+        while self._q and self._q[0][3].cancelled:
+            heapq.heappop(self._q)
+        return self._q[0][0] if self._q else float("inf")
 
     def run(self, until: float = float("inf"), max_events: int = 10_000_000) -> None:
         n = 0
         while self._q and self._q[0][0] <= until:
-            t, _, fn = heapq.heappop(self._q)
+            t, _, fn, h = heapq.heappop(self._q)
+            if h.cancelled:
+                self.n_cancelled += 1
+                continue
             self.now = t
             fn()
             n += 1
+            self.n_fired += 1
             if n >= max_events:
                 raise RuntimeError("event budget exceeded (livelock?)")
 
     def empty(self) -> bool:
-        return not self._q
+        return self.peek() == float("inf")

@@ -56,6 +56,7 @@ def simulate_tcp(n_bytes: int, ch: Channel, *, window: int = 32,
         "done_time": 0.0,
         "tx": 0,
         "rounds": np.zeros(n, int),
+        "rto_timer": {},               # pkt -> live EventHandle
     }
 
     def try_send():
@@ -74,7 +75,8 @@ def simulate_tcp(n_bytes: int, ch: Channel, *, window: int = 32,
             if not lost:
                 q.schedule(state["link_free"] + ch.latency_s,
                            lambda p=pkt: on_arrive(p))
-            q.schedule(state["link_free"] + rto, lambda p=pkt: on_timeout(p))
+            state["rto_timer"][pkt] = q.schedule(
+                state["link_free"] + rto, lambda p=pkt: on_timeout(p))
 
     def on_arrive(pkt):
         # data arrives; ACK flies back one propagation later
@@ -85,6 +87,9 @@ def simulate_tcp(n_bytes: int, ch: Channel, *, window: int = 32,
         if not state["acked"][pkt]:
             state["acked"][pkt] = True
             state["outstanding"].discard(pkt)
+            timer = state["rto_timer"].pop(pkt, None)
+            if timer is not None:
+                timer.cancel()
             try_send()
 
     def on_timeout(pkt):

@@ -11,7 +11,6 @@ real, not modelled.
 """
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass
 
 import jax
@@ -30,6 +29,27 @@ class NetworkConfig:
     protocol: str                  # 'tcp' | 'udp'
     channel: Channel
     mtu: int = MTU_BYTES
+
+
+def measure_flow(scenario: Scenario, netcfg: NetworkConfig, model, params,
+                 input_bytes: int, n_frames: int = 8) -> dict:
+    """Per-flow latency decomposition of one scenario over one network.
+
+    Returns ``edge_s``/``server_s`` compute times, the wire payload, and
+    ``n_frames`` independent :class:`TransferResult` draws (empty for LC).
+    ``ApplicationSimulator.simulate`` consumes this for single-link runs;
+    ``repro.fleet.planner`` consumes it to cost whole deployments without
+    re-deriving the timing model.
+    """
+    times = scenario_times_and_payload(scenario, model, params,
+                                       input_bytes=input_bytes, batch=1)
+    frames = []
+    if times["wire_bytes"] > 0:
+        frames = [simulate_transfer(netcfg.protocol, times["wire_bytes"],
+                                    netcfg.channel, stream=f, mtu=netcfg.mtu)
+                  for f in range(n_frames)]
+    return {**times, "frames": frames,
+            "wire_s": [t.duration_s for t in frames]}
 
 
 def chunk_mask_from_packets(n_elems: int, delivered: np.ndarray,
@@ -67,12 +87,13 @@ class ApplicationSimulator:
 
     # -------------------------------------------------------- scenarios ----
     def simulate(self, scenario: Scenario, xs: np.ndarray, ys: np.ndarray,
-                 n_frames: int = 32) -> SimVerdict:
-        ch = self.netcfg.channel
+                 n_frames: int = 32, *, flow: dict = None) -> SimVerdict:
+        """``flow``: a precomputed :func:`measure_flow` result to reuse
+        (the planner shares one per leg); measured fresh when omitted."""
         proto = self.netcfg.protocol
-        times = scenario_times_and_payload(
-            scenario, self.model, self.params,
-            input_bytes=int(np.prod(xs.shape[1:])) * 4, batch=1)
+        times = flow if flow is not None else measure_flow(
+            scenario, self.netcfg, self.model, self.params,
+            input_bytes=int(np.prod(xs.shape[1:])) * 4, n_frames=n_frames)
 
         if scenario.kind == "LC":
             model, params = self.lc_model or self.model, self.lc_params or self.params
@@ -83,12 +104,10 @@ class ApplicationSimulator:
                               self._accuracy(preds, ys),
                               meta={"wire_bytes": 0, "transfers": []})
 
-        # transmission: simulate n_frames transfers (distinct loss draws)
-        frames = [simulate_transfer(proto, times["wire_bytes"], ch,
-                                    stream=f, mtu=self.netcfg.mtu)
-                  for f in range(n_frames)]
+        # transmission: n_frames transfers with distinct loss draws
+        frames = times["frames"]
         lat = (times["edge_s"] + times["server_s"]
-               + float(np.mean([t.duration_s for t in frames])))
+               + float(np.mean(times["wire_s"])))
 
         # accuracy: TCP delivers everything; UDP corrupts the payload
         if scenario.kind == "RC":
@@ -119,7 +138,7 @@ class ApplicationSimulator:
         else:
             masks = np.stack([
                 chunk_mask_from_packets(
-                    n_elems, frames[i % n_frames].delivered,
+                    n_elems, frames[i % len(frames)].delivered,
                     self.wire_dtype_bytes, self.netcfg.mtu)
                 for i in range(xs.shape[0])]).astype(np.float32)
             preds = self._apply_batched(fn, xs, masks)

@@ -25,6 +25,42 @@ class Request:
     out: List[int] = field(default_factory=list)
 
 
+@dataclass(frozen=True)
+class BatchCostModel:
+    """Analytic per-replica service-time model of the static-batch engine.
+
+    One batch pays a fixed dispatch/prefill overhead, then per-item FLOPs at
+    the platform's effective throughput — batching amortises the overhead,
+    which is what the fleet's dynamic batching window exploits.  This is the
+    capacity model ``repro.fleet.cluster`` runs its replicas on.
+    """
+    flops_per_item: float            # server-side FLOPs of one request
+    flops_per_s: float               # replica effective throughput
+    fixed_overhead_s: float = 2e-4   # dispatch + prefill per batch
+
+    def service_time(self, batch_size: int) -> float:
+        assert batch_size >= 1
+        return (self.fixed_overhead_s
+                + batch_size * self.flops_per_item / self.flops_per_s)
+
+    def throughput(self, batch_size: int) -> float:
+        """Requests/s one replica sustains at that batch size."""
+        return batch_size / self.service_time(batch_size)
+
+    @classmethod
+    def for_split(cls, model, params, split_layer: Optional[int],
+                  platform, *, fixed_overhead_s: float = 2e-4) -> "BatchCostModel":
+        """Server-side cost of one request for a cut after ``split_layer``
+        (``None`` = the server runs the whole model, i.e. scenario RC)."""
+        from repro.core import stats as S
+        if split_layer is None:
+            flops = S.total_flops(model, params, batch=1)
+        else:
+            _, flops = S.flops_split(model, params, split_layer, batch=1)
+        return cls(float(flops), platform.flops_per_s,
+                   fixed_overhead_s=fixed_overhead_s)
+
+
 class ServingEngine:
     """Static-batch engine: pad prompts, prefill once, decode greedily."""
 

@@ -1,0 +1,250 @@
+"""Fleet subsystem tests: traffic determinism, cluster queueing behaviour,
+planner feasibility, and the shared event engine."""
+import numpy as np
+import pytest
+
+import repro.netsim.events as events
+import repro.fleet.cluster as cluster_mod
+from repro.core.qos import QoSRequirements
+from repro.fleet import (ClusterConfig, ClusterSim, DeviceClass,
+                         DeploymentPlanner, SearchSpace, generate_trace)
+from repro.fleet.planner import simulate_deployment
+from repro.netsim.channel import Channel
+from repro.serving.engine import BatchCostModel
+
+
+def _mix(loss=0.0):
+    return [DeviceClass.make("mcu", Channel(1e-3, 1e6, 1e6, loss_rate=loss,
+                                            seed=1), weight=1.0),
+            DeviceClass.make("edge-embedded",
+                             Channel(1e-4, 50e6, 50e6, loss_rate=loss, seed=2),
+                             weight=2.0),
+            DeviceClass.make("edge-accelerator",
+                             Channel(1e-4, 1e9, 1e9, seed=3), weight=1.0)]
+
+
+# ------------------------------------------------------------- traffic ----
+@pytest.mark.parametrize("pattern", ["poisson", "bursty", "diurnal"])
+def test_trace_deterministic_under_seed(pattern):
+    mix = _mix()
+    a = generate_trace(mix, 400, 100.0, pattern=pattern, seed=7)
+    b = generate_trace(mix, 400, 100.0, pattern=pattern, seed=7)
+    assert [(r.t_arrival, r.device) for r in a.requests] == \
+           [(r.t_arrival, r.device) for r in b.requests]
+    c = generate_trace(mix, 400, 100.0, pattern=pattern, seed=8)
+    assert [r.t_arrival for r in a.requests] != [r.t_arrival for r in c.requests]
+    # arrivals are sorted, strictly positive, and every class shows up
+    ts = [r.t_arrival for r in a.requests]
+    assert ts == sorted(ts) and ts[0] > 0
+    assert {r.device for r in a.requests} == {d.name for d in mix}
+
+
+@pytest.mark.parametrize("pattern,kw", [
+    ("poisson", {}), ("bursty", {}),
+    # mean rate only converges over whole periods: use a short one
+    ("diurnal", {"period_s": 5.0}),
+])
+def test_trace_hits_requested_mean_rate(pattern, kw):
+    tr = generate_trace(_mix(), 8000, 250.0, pattern=pattern, seed=0, **kw)
+    assert abs(tr.mean_rate_hz() - 250.0) / 250.0 < 0.15
+
+
+def test_bursty_is_burstier_than_poisson():
+    def dispersion(tr, window=0.1):
+        """Index of dispersion of counts — burstiness shows up in windowed
+        count variance, not in the raw inter-arrival CV."""
+        ts = np.array([r.t_arrival for r in tr.requests])
+        counts, _ = np.histogram(ts, np.arange(0.0, ts[-1], window))
+        return counts.var() / counts.mean()
+    po = dispersion(generate_trace(_mix(), 4000, 100.0, pattern="poisson", seed=4))
+    bu = dispersion(generate_trace(_mix(), 4000, 100.0, pattern="bursty", seed=4))
+    assert po < 1.5                 # poisson: D ~= 1
+    assert bu > po * 2.0, (po, bu)  # MMPP: overdispersed
+
+
+def test_device_mix_follows_weights():
+    tr = generate_trace(_mix(), 4000, 100.0, seed=2)
+    n = {d: len(tr.for_device(d).requests)
+         for d in ("mcu", "edge-embedded", "edge-accelerator")}
+    assert abs(n["edge-embedded"] / 4000 - 0.5) < 0.05
+    assert sum(n.values()) == 4000
+
+
+def test_unknown_pattern_and_platform_raise():
+    with pytest.raises(ValueError):
+        generate_trace(_mix(), 10, 1.0, pattern="fractal")
+    with pytest.raises(KeyError):
+        DeviceClass.make("server-gpu", Channel(1e-4, 1e9, 1e9))
+
+
+# -------------------------------------------------------- event engine ----
+def test_fleet_and_netsim_share_one_event_queue_impl():
+    assert cluster_mod.EventQueue is events.EventQueue
+
+
+def test_event_handle_cancellation():
+    q = events.EventQueue()
+    seen = []
+    h = q.schedule(1.0, lambda: seen.append("dead"))
+    q.schedule(2.0, lambda: seen.append("live"))
+    h.cancel()
+    assert q.peek() == 2.0          # cancelled head is skipped
+    q.run()
+    assert seen == ["live"]
+    assert q.empty()
+
+
+# -------------------------------------------------------------- cluster ----
+def _cost(service_s=1e-3):
+    # max_batch=1 service time == fixed overhead => deterministic M/D/c
+    return BatchCostModel(flops_per_item=0.0, flops_per_s=1e12,
+                          fixed_overhead_s=service_s)
+
+
+def test_queueing_latency_monotone_in_arrival_rate():
+    mix = _mix()
+    lats = []
+    for rate in (300.0, 600.0, 900.0):     # capacity: 1000 req/s
+        tr = generate_trace(mix, 1500, rate, seed=11)
+        sim = ClusterSim(_cost(1e-3), ClusterConfig(
+            n_replicas=1, max_batch=1, batch_window_s=0.0))
+        sim.offer_trace((r.rid, r.t_arrival) for r in tr.requests)
+        st = sim.run()
+        assert len(st.served) == 1500 and st.dropped == 0
+        lats.append(st.latencies().mean())
+    assert lats[0] < lats[1] < lats[2], lats
+
+
+def test_cluster_drops_when_admission_queue_full():
+    tr = generate_trace(_mix(), 800, 5000.0, seed=3)   # 5x overload
+    sim = ClusterSim(_cost(1e-3), ClusterConfig(
+        n_replicas=1, max_batch=1, batch_window_s=0.0, queue_limit=16))
+    sim.offer_trace((r.rid, r.t_arrival) for r in tr.requests)
+    st = sim.run()
+    assert st.dropped > 0
+    assert len(st.served) + st.dropped == 800
+    assert 0.0 < st.drop_fraction() < 1.0
+
+
+def test_dynamic_batching_amortizes_and_respects_max_batch():
+    tr = generate_trace(_mix(), 2000, 4000.0, seed=5)
+    cfg = ClusterConfig(n_replicas=1, max_batch=8, batch_window_s=2e-3)
+    sim = ClusterSim(_cost(1e-3), cfg)
+    sim.offer_trace((r.rid, r.t_arrival) for r in tr.requests)
+    st = sim.run()
+    assert 1.0 < st.mean_batch() <= cfg.max_batch
+    # every batch bounded by max_batch
+    assert st.batches * cfg.max_batch >= len(st.served)
+    # full batches dispatched early => their window timers were cancelled
+    assert sim.q.n_cancelled > 0
+
+
+def test_replicas_add_capacity():
+    tr = generate_trace(_mix(), 1500, 1800.0, seed=9)  # 1 replica: overloaded
+    waits = []
+    for r in (1, 2):
+        sim = ClusterSim(_cost(1e-3), ClusterConfig(
+            n_replicas=r, max_batch=1, batch_window_s=0.0))
+        sim.offer_trace((req.rid, req.t_arrival) for req in tr.requests)
+        waits.append(sim.run().latencies().mean())
+    assert waits[1] < waits[0] * 0.5
+
+
+def test_embedded_cluster_uses_outer_queue():
+    q = events.EventQueue()
+    sim = ClusterSim(_cost(1e-3), ClusterConfig(1, 1, 0.0), queue=q)
+    sim.offer(0, 0.5)
+    q.run()
+    assert len(sim.stats.served) == 1
+    assert sim.q is q
+
+
+# -------------------------------------------------------------- planner ----
+@pytest.fixture(scope="module")
+def planner(request):
+    vgg_small = request.getfixturevalue("vgg_small")
+    model, params = vgg_small
+    from repro.models.vgg import feature_index
+    fi = feature_index(model)
+    cs = np.linspace(1.0, 0.2, len(fi))
+
+    def accuracy_fn(scenario, netcfg):
+        # analytic proxy: UDP loses accuracy with channel loss, TCP doesn't
+        base = 0.9 if scenario.kind != "LC" else 0.6
+        if netcfg.protocol == "udp":
+            base -= netcfg.channel.loss_rate
+        return base
+
+    return DeploymentPlanner(model, params, cs_curve=cs, layer_idx=fi,
+                             accuracy_fn=accuracy_fn,
+                             input_bytes=16 * 16 * 3 * 4, n_frames=4)
+
+
+@pytest.fixture(scope="module")
+def space(planner):
+    legal = set(planner.model.cut_points())
+    sps = tuple(sp for sp in planner.layer_idx if sp in legal)[:3]
+    return SearchSpace(split_points=sps, protocols=("tcp", "udp"),
+                       batch_sizes=(1, 4), replica_counts=(1, 2),
+                       top_k_splits=2)
+
+
+def test_planner_suggest_returns_only_feasible(planner, space):
+    mix = _mix(loss=0.1)
+    trace = generate_trace(mix, 300, 150.0, seed=21)
+    qos = QoSRequirements(max_latency_s=1.0, min_accuracy=0.5)
+    plans = planner.suggest(qos, (trace, mix), space)
+    assert set(plans) == {d.name for d in mix}
+    assert any(p is not None for p in plans.values())
+    for p in plans.values():
+        if p is not None:
+            assert p.satisfies(qos)
+            assert p.p99_s <= qos.max_latency_s
+            assert p.accuracy >= qos.min_accuracy
+
+
+def test_planner_infeasible_qos_yields_none(planner, space):
+    mix = _mix()
+    trace = generate_trace(mix, 100, 50.0, seed=22)
+    impossible = QoSRequirements(max_latency_s=1e-9, min_accuracy=0.999)
+    plans = planner.suggest(impossible, (trace, mix), space)
+    assert all(p is None for p in plans.values())
+
+
+def test_pareto_front_is_nondominated(planner, space):
+    mix = _mix(loss=0.05)
+    trace = generate_trace(mix, 200, 100.0, seed=23)
+    points = planner.search(trace, mix, space)
+    front = planner.pareto_front(points)
+    assert front
+    for p in front:
+        rivals = [o for o in points if o.device == p.device]
+        for o in rivals:
+            po, oo = p.objectives(), o.objectives()
+            assert not (all(b <= a for a, b in zip(po, oo))
+                        and any(b < a for a, b in zip(po, oo))), (p, o)
+
+
+def test_planner_candidates_pruned_by_cs_ranking(planner, space):
+    cands = planner.candidates(space)
+    sc = [c for c in cands if c[0].startswith("SC")]
+    assert len(sc) == space.top_k_splits
+    # cs curve is decreasing, so the earliest cuts rank first
+    proxies = [planner.cs_curve[planner.layer_idx.index(s)] for _, s in sc]
+    assert proxies == sorted(proxies, reverse=True)
+    assert ("RC", None) in cands
+
+
+def test_joint_deployment_simulation(planner, space):
+    mix = _mix()
+    trace = generate_trace(mix, 300, 200.0, seed=24)
+    qos = QoSRequirements(max_latency_s=1.0, min_accuracy=0.0)
+    plans = planner.suggest(qos, (trace, mix), space)
+    report = simulate_deployment(plans, trace, mix, planner)
+    assert report
+    total = sum(g["n_served"] for g in report.values())
+    planned = sum(len(trace.for_device(d).requests) for d, p in plans.items()
+                  if p is not None and p.label != "LC")
+    assert total == planned
+    for g in report.values():
+        assert g["p99_s"] >= g["p50_s"] > 0

@@ -17,4 +17,9 @@ def test_multipod_pipeline_example():
     out = subprocess.run([sys.executable, script], env=env, timeout=600,
                          capture_output=True, text=True)
     assert out.returncode == 0, out.stderr[-2000:]
-    assert "max err 0.00e+00" in out.stdout
+    # bitwise-identical on some jax versions; reassociation across
+    # shard_map/scan can differ in the last float32 bits on others
+    import re
+    m = re.search(r"max err ([0-9.e+-]+)", out.stdout)
+    assert m, out.stdout
+    assert float(m.group(1)) <= 1e-4, out.stdout

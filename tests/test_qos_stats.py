@@ -3,7 +3,7 @@ import numpy as np
 import pytest
 
 from repro.core.qos import (Candidate, QoSRequirements, SimVerdict, pareto,
-                            rank_candidates, suggest)
+                            pareto_nd, rank_candidates, suggest)
 from repro.core import stats as S
 
 
@@ -32,11 +32,25 @@ def test_rank_candidates_order():
     assert ranked[0].label == "RC" and ranked[-1].label == "LC"
 
 
+def test_rank_candidates_missing_split_point_raises():
+    with pytest.raises(ValueError, match="no CS value"):
+        rank_candidates(np.array([0.1, 0.9]), [2, 5], [5, 7])
+
+
 def test_pareto_front():
     vs = [_v("a", 0.01, 0.5), _v("b", 0.02, 0.9), _v("c", 0.03, 0.8),
           _v("d", 0.05, 0.9)]
     front = [v.candidate.label for v in pareto(vs)]
     assert front == ["a", "b"]
+
+
+def test_pareto_nd_three_objectives():
+    items = [("a", (1.0, -0.9, 5.0)),    # fast, accurate, expensive
+             ("b", (2.0, -0.9, 1.0)),    # slower, as accurate, cheap
+             ("c", (2.0, -0.8, 2.0)),    # dominated by b
+             ("d", (1.0, -0.9, 5.0))]    # duplicate of a: both survive
+    keep = {p for p, _ in pareto_nd(items)}
+    assert keep == {"a", "b", "d"}
 
 
 # ------------------------------------------------------------ statistics ----
