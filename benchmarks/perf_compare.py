@@ -1,18 +1,130 @@
 import os
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
 
-"""§Perf hillclimbs 1-2 driver: re-lowers the selected (arch x shape)
-pairs with the optimisation flags on, into ``results/dryrun_opt``, and
-prints before/after roofline terms against the baselines in
-``results/dryrun``.
+"""Two drivers in one module:
 
-  PYTHONPATH=src python -m benchmarks.perf_compare [--pairs a:b,c:d]
+1. **roofline** (default, §Perf hillclimbs 1-2): re-lowers the selected
+   (arch x shape) pairs with the optimisation flags on, into
+   ``results/dryrun_opt``, and prints before/after roofline terms against
+   the baselines in ``results/dryrun``.
+
+     PYTHONPATH=src python -m benchmarks.perf_compare [--pairs a:b,c:d]
+
+2. **gate** (the CI benchmark regression gate): compare a fresh benchmark
+   JSON artifact against the committed snapshot in
+   ``benchmarks/baselines/`` and fail (exit 1) on regression.  Latency
+   metrics fail on >20% regression by default; wall-clock-sensitive
+   metrics carry wider per-metric tolerances so machine variance doesn't
+   flap the gate; prediction-error metrics also enforce an absolute
+   ceiling.
+
+     PYTHONPATH=src python -m benchmarks.perf_compare gate \\
+         --kind fleet --current results/fleet/bench_fleet.json \\
+         --baseline benchmarks/baselines/bench_fleet_quick.json
 """
 import argparse
 import json
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+
+# --------------------------------------------------------------- gate ----
+# (json_path, direction, rel_tolerance, abs_ceiling) — direction is the
+# *good* direction; regression = moving the other way by > tolerance.
+# Simulated latencies are deterministic given a seed, so 20% is generous;
+# events_per_s / err_pct depend on the host wall clock and get slack.
+GATE_SPECS = {
+    "fleet": [
+        ("cluster.p50_ms", "lower", None, None),
+        ("cluster.p99_ms", "lower", None, None),
+        ("cluster.mean_batch", "higher", None, None),
+        ("planner.pareto_size", "higher", 0.50, None),
+        ("planner.n_feasible", "higher", 0.50, None),
+    ],
+    # err_pct metrics are ratios of wall-clock measurements: the absolute
+    # ceiling is the gate (a broken calibration path shows 100%+ errors),
+    # relative drift is effectively unbounded so runner load can't flap it
+    "runtime": [
+        ("max_err_measured_pct", "lower", float("inf"), 45.0),
+        ("mean_err_measured_pct", "lower", float("inf"), 30.0),
+    ],
+}
+
+
+def _dig(doc: dict, path: str):
+    cur = doc
+    for part in path.split("."):
+        cur = cur[part]
+    return cur
+
+
+def compare_metrics(current: dict, baseline: dict, specs,
+                    max_regress: float) -> list:
+    """Returns rows ``(path, base, cur, regress_frac, ok, note)``."""
+    rows = []
+    for path, direction, tol, ceiling in specs:
+        tol = max_regress if tol is None else tol
+        try:
+            base, cur = float(_dig(baseline, path)), float(_dig(current, path))
+        except KeyError:
+            rows.append((path, None, None, 0.0, False, "missing metric"))
+            continue
+        if base == 0:
+            # sign depends on direction: growing from a zero baseline is a
+            # regression only for lower-is-better metrics
+            if cur == 0:
+                regress = 0.0
+            elif direction == "lower":
+                regress = float("inf")
+            else:
+                regress = float("-inf")
+        elif direction == "lower":
+            regress = (cur - base) / abs(base)
+        else:
+            regress = (base - cur) / abs(base)
+        ok = regress <= tol
+        note = f"ceiling {ceiling}" if tol == float("inf") else f"tol {tol:.0%}"
+        if ceiling is not None and cur > ceiling:
+            ok = False
+            note = f"ceiling {ceiling} exceeded"
+        rows.append((path, base, cur, regress, ok, note))
+    return rows
+
+
+def run_gate(kind: str, current_path: str, baseline_path: str,
+             max_regress: float = 0.20) -> bool:
+    with open(current_path) as f:
+        current = json.load(f)
+    with open(baseline_path) as f:
+        baseline = json.load(f)
+    rows = compare_metrics(current, baseline, GATE_SPECS[kind], max_regress)
+    print(f"gate[{kind}] {current_path} vs {baseline_path} "
+          f"(max regression {max_regress:.0%})")
+    print(f"{'metric':34s} {'baseline':>12s} {'current':>12s} "
+          f"{'drift':>8s}  verdict")
+    all_ok = True
+    for path, base, cur, regress, ok, note in rows:
+        all_ok &= ok
+        if base is None:
+            print(f"{path:34s} {'-':>12s} {'-':>12s} {'-':>8s}  FAIL ({note})")
+            continue
+        print(f"{path:34s} {base:12.3f} {cur:12.3f} {regress:8.1%}  "
+              f"{'ok' if ok else 'FAIL'} ({note})")
+    print(f"gate[{kind}]: {'PASS' if all_ok else 'FAIL'}")
+    return all_ok
+
+
+def gate_main(argv) -> int:
+    ap = argparse.ArgumentParser(prog="perf_compare gate")
+    ap.add_argument("--kind", required=True, choices=sorted(GATE_SPECS))
+    ap.add_argument("--current", required=True)
+    ap.add_argument("--baseline", required=True)
+    ap.add_argument("--max-regress", type=float, default=0.20,
+                    help="default relative regression tolerance (0.20 = 20%%)")
+    args = ap.parse_args(argv)
+    return 0 if run_gate(args.kind, args.current, args.baseline,
+                         args.max_regress) else 1
 
 DEFAULT_PAIRS = [
     ("llama3.2-3b", "prefill_32k"),   # worst useful-ratio (24 heads % 16)
@@ -22,6 +134,12 @@ DEFAULT_PAIRS = [
 
 
 def main():
+    if len(sys.argv) > 1 and sys.argv[1] == "gate":
+        sys.exit(gate_main(sys.argv[2:]))
+    roofline_main()
+
+
+def roofline_main():
     from repro.launch.dryrun import run_case
     from benchmarks.roofline import analyse
 

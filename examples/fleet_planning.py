@@ -24,7 +24,6 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax.numpy as jnp
-import numpy as np
 
 from benchmarks.common import trained_vgg, vgg_test_accuracy
 from repro.core import bottleneck as B

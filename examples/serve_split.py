@@ -22,7 +22,6 @@ import numpy as np
 from repro.configs import get_config
 from repro.data.synthetic import token_iter
 from repro.kernels import ref as kref
-from repro.models import transformer as T
 from repro.models.common import reduced
 from repro.models.layered import transformer_as_layered
 from repro.netsim.channel import Channel

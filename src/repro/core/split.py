@@ -15,7 +15,6 @@ Two execution mappings of the same split:
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
 from typing import Optional
 
@@ -49,6 +48,22 @@ class SplitPlan:
 
 def legal_cuts(model: LayeredModel) -> list:
     return model.cut_points()
+
+
+def validate_cut(model: LayeredModel, split_layer: int) -> int:
+    """Check a cut index against the model's legality rule.
+
+    Single authority for "is this split executable" — the runtime partition,
+    the planner and the examples all route through here so an illegal cut
+    fails loudly with the legal alternatives instead of silently producing a
+    head/tail pair that can never run.
+    """
+    cuts = model.cut_points()
+    if split_layer not in cuts:
+        raise ValueError(
+            f"cut after layer {split_layer} is not legal for {model.name!r}; "
+            f"legal cuts: {cuts}")
+    return split_layer
 
 
 def wire_payload_bytes(model: LayeredModel, params, plan: SplitPlan,

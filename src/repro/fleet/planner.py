@@ -82,13 +82,23 @@ class DeploymentPlanner:
                  ae_map=None, eval_data=None, accuracy_fn=None,
                  lc_model=None, lc_params=None,
                  server_platform=PLATFORMS["server-gpu"],
-                 input_bytes: Optional[int] = None, n_frames: int = 8):
+                 input_bytes: Optional[int] = None, n_frames: int = 8,
+                 cost_source: str = "analytic", calibration=None):
         if accuracy_fn is None and eval_data is None:
             raise ValueError("need eval_data to measure accuracy "
                              "(or pass accuracy_fn)")
         if input_bytes is None and eval_data is None:
             raise ValueError("need input_bytes when no eval_data is given "
                              "(it is derived from the eval inputs otherwise)")
+        if cost_source not in ("analytic", "measured"):
+            raise ValueError(f"cost_source must be 'analytic' or 'measured',"
+                             f" got {cost_source!r}")
+        if cost_source == "measured" and calibration is None:
+            raise ValueError("cost_source='measured' needs a calibration "
+                             "table (repro.runtime.calibrate.calibrate)")
+        if cost_source == "analytic" and calibration is not None:
+            raise ValueError("calibration given but cost_source='analytic' "
+                             "would ignore it; pass cost_source='measured'")
         self.model, self.params = model, params
         self.cs_curve, self.layer_idx = cs_curve, list(layer_idx)
         self.ae_map = dict(ae_map or {})
@@ -101,6 +111,8 @@ class DeploymentPlanner:
             input_bytes = int(np.prod(xs.shape[1:])) * 4
         self.input_bytes = input_bytes
         self.n_frames = n_frames
+        self.cost_source = cost_source
+        self.calibration = calibration
         self._flow_cache = {}
         self._cost_cache = {}
 
@@ -136,7 +148,8 @@ class DeploymentPlanner:
         scenario = self._scenario(device, label, split)
         netcfg = NetworkConfig(protocol, device.channel)
         flow = measure_flow(scenario, netcfg, self.model, self.params,
-                            self.input_bytes, n_frames=self.n_frames)
+                            self.input_bytes, n_frames=self.n_frames,
+                            calibration=self.calibration)
         if self.accuracy_fn is not None:
             acc = float(self.accuracy_fn(scenario, netcfg))
         else:
@@ -153,8 +166,21 @@ class DeploymentPlanner:
 
     def _cost_model(self, split: Optional[int]) -> BatchCostModel:
         if split not in self._cost_cache:
-            self._cost_cache[split] = BatchCostModel.for_split(
-                self.model, self.params, split, self.server_platform)
+            cost = None
+            if self.calibration is not None:
+                kind = "SC" if split is not None else "RC"
+                entry = self.calibration.lookup(kind, split)
+                if entry is not None:
+                    # server-side wall clock of the executed tail stage,
+                    # normalised to one request (table is per cal-batch)
+                    per_item = entry.server_s / max(
+                        1, getattr(self.calibration, "batch", 1))
+                    cost = BatchCostModel.from_measured(
+                        per_item, self.server_platform.flops_per_s)
+            if cost is None:
+                cost = BatchCostModel.for_split(
+                    self.model, self.params, split, self.server_platform)
+            self._cost_cache[split] = cost
         return self._cost_cache[split]
 
     def default_space(self) -> SearchSpace:

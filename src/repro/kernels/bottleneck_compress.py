@@ -18,11 +18,37 @@ Validated against ``ref.bottleneck_compress_ref`` in interpret mode.
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+
+def tpu_available() -> bool:
+    """True when the default backend is a real TPU (not interpret mode)."""
+    try:
+        return jax.devices()[0].platform == "tpu"
+    except RuntimeError:
+        return False
+
+
+def resolve_backend(backend: str | None = None) -> str:
+    """Pick the execution path for the compress op.
+
+    ``backend``: 'auto' | 'kernel' | 'interpret' | 'ref' (or None = env
+    ``REPRO_BOTTLENECK_BACKEND``, default 'auto').  'auto' compiles the
+    Pallas kernel on TPU and uses the pure-JAX reference everywhere else,
+    so the runtime/CI can call this op on any host; 'interpret' forces the
+    Pallas interpreter (kernel-logic validation on CPU).
+    """
+    backend = backend or os.environ.get("REPRO_BOTTLENECK_BACKEND", "auto")
+    if backend not in ("auto", "kernel", "interpret", "ref"):
+        raise ValueError(f"unknown bottleneck backend {backend!r}")
+    if backend == "auto":
+        return "kernel" if tpu_available() else "ref"
+    return backend
 
 
 def _compiler_params():
@@ -86,3 +112,44 @@ def bottleneck_compress(f: jax.Array, w: jax.Array, b: jax.Array, *,
         interpret=interpret,
     )(f, w, b)
     return q, s
+
+
+def _pad_to(n: int, mult: int) -> int:
+    return ((n + mult - 1) // mult) * mult
+
+
+def bottleneck_compress_any(f: jax.Array, w: jax.Array, b: jax.Array, *,
+                            backend: str | None = None,
+                            bn: int = 128, bc: int = 512):
+    """Shape-flexible, backend-routed compress: the runtime's entry point.
+
+    Accepts activations with any leading dims ``(..., C)``; pads N/C up to
+    the kernel's tile multiples (zero rows quantise to zero and are
+    dropped), and routes per :func:`resolve_backend` — the Pallas kernel on
+    TPU, the jnp reference otherwise — so the exact same int8 wire payload
+    is produced on every host.
+
+    Returns ``(q int8 (..., L), scales f32 (..., 1))``.
+    """
+    from . import ref as _ref
+
+    lead = f.shape[:-1]
+    c = f.shape[-1]
+    l = w.shape[1]
+    f2 = f.reshape(-1, c)
+    n = f2.shape[0]
+    mode = resolve_backend(backend)
+    if mode == "ref":
+        q, s = _ref.bottleneck_compress_ref(f2, w, b)
+    else:
+        np_, cp = n, c
+        if n > bn and n % bn:
+            np_ = _pad_to(n, bn)
+        if c > bc and c % bc:
+            cp = _pad_to(c, bc)
+        fp = jnp.zeros((np_, cp), f2.dtype).at[:n, :c].set(f2)
+        wp = jnp.zeros((cp, l), w.dtype).at[:c].set(w)
+        q, s = bottleneck_compress(fp, wp, b, bn=bn, bc=bc,
+                                   interpret=(mode == "interpret"))
+        q, s = q[:n], s[:n]
+    return q.reshape(lead + (l,)), s.reshape(lead + (1,))

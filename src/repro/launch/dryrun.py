@@ -17,12 +17,10 @@ Usage:
 """
 import argparse
 import json
-import re
 import time
 import traceback
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import ARCHS, get_config
 from repro.configs.shapes import SHAPES, input_specs, params_struct, variant_for_shape

@@ -17,7 +17,6 @@ models.  This module re-derives per-device costs from ``compiled.as_text()``:
 """
 from __future__ import annotations
 
-import json
 import re
 from dataclasses import dataclass, field
 

@@ -13,7 +13,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config
-from repro.configs.shapes import text_len
 from repro.data.synthetic import token_iter
 from repro.models.common import reduced
 from repro.sharding import rules

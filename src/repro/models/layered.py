@@ -10,9 +10,8 @@ applies to every assigned architecture.
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
-from typing import Any, Callable, List, Optional
+from typing import Any, Callable, List
 
 import jax
 import jax.numpy as jnp

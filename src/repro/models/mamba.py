@@ -109,7 +109,6 @@ def mamba_seq(p, x, cfg, init_state=None, *, chunk: int = 128, shard_fn=None):
 
 def mamba_step(p, x, state, cfg):
     """One-token decode. x: (B,1,D); state=(conv (B,dc-1,di) f32, ssm (B,di,ds) f32)."""
-    b = x.shape[0]
     di, ds, dc = d_inner(cfg), cfg.mamba_d_state, cfg.mamba_d_conv
     conv_state, h = state
     xz = x[:, 0, :] @ p["in_proj"]

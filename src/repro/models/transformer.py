@@ -18,8 +18,6 @@ meshes; it defaults to identity.
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp

@@ -32,7 +32,8 @@ class NetworkConfig:
 
 
 def measure_flow(scenario: Scenario, netcfg: NetworkConfig, model, params,
-                 input_bytes: int, n_frames: int = 8) -> dict:
+                 input_bytes: int, n_frames: int = 8, *,
+                 calibration=None, batch: int = 1) -> dict:
     """Per-flow latency decomposition of one scenario over one network.
 
     Returns ``edge_s``/``server_s`` compute times, the wire payload, and
@@ -40,9 +41,32 @@ def measure_flow(scenario: Scenario, netcfg: NetworkConfig, model, params,
     ``ApplicationSimulator.simulate`` consumes this for single-link runs;
     ``repro.fleet.planner`` consumes it to cost whole deployments without
     re-deriving the timing model.
+
+    ``calibration``: a ``repro.runtime.calibrate.CalibrationTable`` (or any
+    object with the same ``flow_times(kind, split)``).  When it covers this
+    scenario's cell, compute times and the wire payload come from the
+    *measured* split-runtime execution instead of the analytic
+    FLOPs/throughput model — the returned dict's ``cost_source`` says
+    which path produced it.  Tables calibrated at a different batch size
+    are rescaled linearly to ``batch`` (first-order model; re-calibrate at
+    the serving batch for exact numbers).
     """
-    times = scenario_times_and_payload(scenario, model, params,
-                                       input_bytes=input_bytes, batch=1)
+    times = None
+    if calibration is not None:
+        split = getattr(scenario.split_plan, "split_layer", None)
+        times = calibration.flow_times(scenario.kind, split)
+        cal_batch = getattr(calibration, "batch", batch) or batch
+        if times is not None and cal_batch != batch:
+            scale = batch / cal_batch
+            times = {**times,
+                     "edge_s": times["edge_s"] * scale,
+                     "server_s": times["server_s"] * scale,
+                     "wire_bytes": int(round(times["wire_bytes"] * scale))}
+    if times is None:
+        times = dict(scenario_times_and_payload(scenario, model, params,
+                                                input_bytes=input_bytes,
+                                                batch=batch),
+                     cost_source="analytic")
     frames = []
     if times["wire_bytes"] > 0:
         frames = [simulate_transfer(netcfg.protocol, times["wire_bytes"],
@@ -50,6 +74,13 @@ def measure_flow(scenario: Scenario, netcfg: NetworkConfig, model, params,
                   for f in range(n_frames)]
     return {**times, "frames": frames,
             "wire_s": [t.duration_s for t in frames]}
+
+
+def flow_latency_s(flow: dict) -> float:
+    """One-frame latency of a :func:`measure_flow` result:
+    edge compute + mean wire transfer + server compute."""
+    wire = float(np.mean(flow["wire_s"])) if flow["wire_s"] else 0.0
+    return flow["edge_s"] + wire + flow["server_s"]
 
 
 def chunk_mask_from_packets(n_elems: int, delivered: np.ndarray,

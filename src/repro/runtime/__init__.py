@@ -1,0 +1,13 @@
+"""Live split-execution runtime: partition -> wire -> tail, measured.
+
+The executable counterpart of the ``netsim``/``fleet`` simulators — and
+the instrument that calibrates them (``runtime.calibrate`` feeds
+``measure_flow``/``DeploymentPlanner`` their ``cost_source="measured"``
+path).
+"""
+from .calibrate import CalEntry, CalibrationTable, calibrate       # noqa: F401
+from .engine import (RuntimeResult, SplitRuntime, TailServer,      # noqa: F401
+                     run_clients, timeit_blocked)
+from .partition import Partition, make_partition                   # noqa: F401
+from .wire import (WirePacket, decode_activation,                  # noqa: F401
+                   encode_activation, from_bytes, to_bytes)

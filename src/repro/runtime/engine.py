@@ -1,0 +1,211 @@
+"""Live split-execution: head on the edge, tail on the server, the int8
+wire in between.
+
+Two drivers on top of :class:`repro.runtime.partition.Partition`:
+
+* :class:`SplitRuntime` — one client end-to-end: head forward, wire
+  encode -> bytes -> (netsim-priced transfer) -> decode, tail forward.
+  Every stage is wall-clock timed (``jax.block_until_ready`` fences), so a
+  run doubles as a measurement — this is what ``runtime.calibrate`` sweeps
+  to build the simulator's measured cost tables.
+* :class:`TailServer` — the server side under *many* clients: tail
+  requests queue and are batched through a fixed
+  :class:`repro.serving.continuous.SlotPool`, one jitted batched tail
+  forward per step (the SplitNets-style partitioned serving discipline).
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.netsim.channel import Channel
+from repro.netsim.protocols import simulate_transfer
+from repro.runtime import wire as W
+from repro.runtime.partition import Partition, make_partition
+from repro.serving.continuous import SlotPool
+
+
+def timeit_blocked(fn, *args, iters: int = 3, warmup: int = 1) -> tuple:
+    """(best seconds, last output) with compile excluded and device fences.
+
+    Min-over-iterations, not mean: the repeatable cost of the stage.  On a
+    loaded host the mean smears scheduler noise into the calibration
+    tables; min is stable, and since the runtime and the calibrator both
+    measure through here, simulated-vs-executed comparisons cancel the
+    estimator choice.
+    """
+    out = None
+    for _ in range(max(1, warmup)):
+        out = jax.block_until_ready(fn(*args))
+    best = float("inf")
+    for _ in range(max(1, iters)):
+        t0 = time.perf_counter()
+        out = jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best, out
+
+
+@dataclass
+class RuntimeResult:
+    """One timed end-to-end split inference."""
+    logits: np.ndarray
+    split_layer: int
+    head_s: float
+    encode_s: float
+    transfer_s: float                # netsim-priced wire time (0 w/o channel)
+    decode_s: float
+    tail_s: float
+    wire_bytes: int
+    meta: dict = field(default_factory=dict)
+
+    @property
+    def compute_s(self) -> float:
+        return self.head_s + self.encode_s + self.decode_s + self.tail_s
+
+    @property
+    def total_s(self) -> float:
+        return self.compute_s + self.transfer_s
+
+
+class SplitRuntime:
+    """Execute a model split at ``split_layer`` end-to-end on this host.
+
+    ``channel``/``protocol`` price the wire hop with the discrete-event
+    transport models (the bytes are real, the network is simulated — the
+    runtime runs in one process).  ``wire_kind``: 'ae8' when an AE is
+    given, else 'int8' ('f32' for the exactness oracle).
+    """
+
+    def __init__(self, model, params, split_layer: int, *,
+                 ae: Optional[dict] = None,
+                 channel: Optional[Channel] = None, protocol: str = "tcp",
+                 quantize: bool = True, backend: Optional[str] = None):
+        self.part: Partition = make_partition(model, params, split_layer, ae)
+        self.channel, self.protocol = channel, protocol
+        self.quantize, self.backend = quantize, backend
+
+    # ------------------------------------------------------------ stages ----
+    def _encode(self, f):
+        return W.encode_activation(f, self.part.ae, quantize=self.quantize,
+                                   backend=self.backend)
+
+    def infer(self, x, *, iters: int = 3, stream: int = 0) -> RuntimeResult:
+        """Timed head -> wire -> tail execution of one input batch."""
+        x = jnp.asarray(x)
+        head_s, f = timeit_blocked(self.part.head, x, iters=iters)
+        encode_s, buf = timeit_blocked(
+            lambda v: W.to_bytes(self._encode(v)), f, iters=iters)
+        transfer_s, meta = 0.0, {}
+        if self.channel is not None:
+            tr = simulate_transfer(self.protocol, len(buf), self.channel,
+                                   stream=stream)
+            transfer_s = tr.duration_s
+            meta = {"n_packets": tr.n_packets,
+                    "n_transmissions": tr.n_transmissions,
+                    "loss_fraction": tr.loss_fraction}
+        decode_s, f_hat = timeit_blocked(
+            lambda b: W.decode_activation(W.from_bytes(b), self.part.ae),
+            buf, iters=iters)
+        tail_s, logits = timeit_blocked(self.part.tail, f_hat, iters=iters)
+        return RuntimeResult(np.asarray(logits), self.part.split_layer,
+                             head_s, encode_s, transfer_s, decode_s, tail_s,
+                             len(buf), meta)
+
+    def reference(self, x) -> np.ndarray:
+        """Unsplit forward of the same params (equivalence oracle)."""
+        return np.asarray(self.part.full(jnp.asarray(x)))
+
+
+# -------------------------------------------------------- multi-client ----
+@dataclass
+class TailRequest:
+    client_id: int
+    payload: bytes                   # serialized wire packet
+    t_submit: float = 0.0
+
+
+class TailServer:
+    """Server side of the split runtime under N edge clients.
+
+    Requests (wire byte strings) queue; each :meth:`step` admits up to
+    ``n_slots`` of them into the slot pool, decodes, and runs **one**
+    batched tail forward for the whole pool (empty slots padded with
+    zeros, their outputs discarded).  The tail is jitted once for the pool
+    shape — batch composition changes per step without recompiling, the
+    same discipline ``ContinuousBatcher`` applies to decode streams.
+    """
+
+    def __init__(self, part: Partition, *, n_slots: int = 4,
+                 client_batch: int = 1):
+        self.part = part
+        self.pool = SlotPool(n_slots)
+        self.queue: deque = deque()
+        self.client_batch = client_batch
+        self._feat = part.boundary_shape(client_batch)[1:]
+        self.n_batches = 0
+        self.n_served = 0
+        self.occupancy: list = []
+
+    def submit(self, client_id: int, payload: bytes, t: float = 0.0):
+        self.queue.append(TailRequest(client_id, payload, t))
+
+    def step(self) -> dict:
+        """Serve up to ``n_slots`` queued requests in one batched forward.
+
+        Returns ``{client_id: logits}`` for the requests served this step.
+        """
+        while self.queue and self.pool.free_slots():
+            self.pool.admit(self.queue.popleft())
+        active = self.pool.occupied()
+        if not active:
+            return {}
+        fb = jnp.zeros((len(self.pool), self.client_batch) + self._feat,
+                       jnp.float32)
+        for slot, req in active:
+            f = W.decode_activation(W.from_bytes(req.payload), self.part.ae)
+            fb = fb.at[slot].set(f.astype(jnp.float32))
+        # one jitted tail forward for the whole pool (shape is static:
+        # n_slots * client_batch), reusing the partition's compiled stage
+        logits = self.part.tail(
+            fb.reshape((len(self.pool) * self.client_batch,) + self._feat))
+        logits = np.asarray(logits).reshape(
+            (len(self.pool), self.client_batch) + logits.shape[1:])
+        out = {}
+        for slot, req in active:
+            out[req.client_id] = logits[slot]
+            self.pool.release(slot)
+        self.n_batches += 1
+        self.n_served += len(active)
+        self.occupancy.append(len(active))
+        return out
+
+    def drain(self) -> dict:
+        """Step until the queue and pool are empty; merged results."""
+        results = {}
+        while self.queue or self.pool.any_active():
+            results.update(self.step())
+        return results
+
+
+def run_clients(model, params, split_layer: int, client_inputs, *,
+                ae: Optional[dict] = None, n_slots: int = 4,
+                quantize: bool = True) -> tuple:
+    """Convenience driver: N clients each run the head locally, their wire
+    payloads are served by one TailServer.  Returns
+    ``({client_id: logits}, server)``.
+    """
+    part = make_partition(model, params, split_layer, ae)
+    xs = [jnp.asarray(x) for x in client_inputs]
+    bsz = xs[0].shape[0]
+    server = TailServer(part, n_slots=n_slots, client_batch=bsz)
+    for cid, x in enumerate(xs):
+        f = part.head(x)
+        pkt = W.encode_activation(f, ae, quantize=quantize)
+        server.submit(cid, W.to_bytes(pkt))
+    return server.drain(), server

@@ -1,0 +1,85 @@
+"""Executable head/tail partition of a :class:`LayeredModel` at a legal cut.
+
+This is the *live* counterpart of ``core.split``: where ``SplitPlan`` only
+names a design point, a :class:`Partition` is a pair of jitted callables
+that actually run the two sides — the head on the "edge" process, the tail
+on the "server" process — with the activation crossing between them through
+the wire codec (``runtime.wire``).  Legality goes through
+``core.split.validate_cut`` so the runtime and the planner can never
+disagree about which cuts exist.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+
+from repro.core import bottleneck as B
+from repro.core.split import validate_cut
+from repro.models.layered import LayeredModel
+
+
+@dataclass
+class Partition:
+    """Head/tail executables for a cut after ``split_layer``.
+
+    ``head(x)`` runs layers ``[0, split]`` and returns the raw boundary
+    activation; ``tail(f)`` runs layers ``(split, end)`` and returns the
+    logits.  The bottleneck AE (when present) lives in the wire codec, not
+    here — the partition is codec-agnostic so the same head/tail pair can
+    ship f32, int8 or AE-compressed payloads.
+    """
+    model: LayeredModel
+    params: list
+    split_layer: int
+    ae: Optional[dict] = None
+    _head: object = field(default=None, repr=False)
+    _tail: object = field(default=None, repr=False)
+
+    def __post_init__(self):
+        validate_cut(self.model, self.split_layer)
+        m, p, k = self.model, self.params, self.split_layer
+        self._head = jax.jit(lambda x: m.apply_range(p, x, 0, k + 1))
+        self._tail = jax.jit(
+            lambda f: m.apply_range(p, f, k + 1, len(m.layers)))
+
+    # ------------------------------------------------------------ stages ----
+    def head(self, x: jax.Array) -> jax.Array:
+        """Edge side: layers [0, split] -> boundary activation."""
+        return self._head(x)
+
+    def tail(self, f: jax.Array) -> jax.Array:
+        """Server side: boundary activation -> logits."""
+        return self._tail(f)
+
+    def full(self, x: jax.Array) -> jax.Array:
+        """Unsplit reference forward (equivalence oracle)."""
+        return self.tail(self.head(x))
+
+    # ------------------------------------------------------------ shapes ----
+    def boundary_shape(self, batch: int = 1) -> tuple:
+        """Activation shape crossing the wire (with batch dim)."""
+        return tuple(self.model.activation_shapes(
+            self.params, batch)[self.split_layer])
+
+    def describe(self) -> str:
+        return (f"{self.model.name}: head=[0..{self.split_layer}] "
+                f"tail=[{self.split_layer + 1}..{len(self.model.layers) - 1}]"
+                f"{' +ae' if self.ae is not None else ''}")
+
+
+def make_partition(model: LayeredModel, params, split_layer: int,
+                   ae: Optional[dict] = None) -> Partition:
+    """Build (and legality-check) a runnable partition."""
+    return Partition(model, params, split_layer, ae)
+
+
+def head_with_encoder(part: Partition, x: jax.Array) -> jax.Array:
+    """Paper-faithful edge stage: head layers + AE encoder (f32 latent).
+
+    Thin wrapper over ``core.bottleneck.head_forward`` kept for parity
+    checks between the runtime path and the simulator's SC forward.
+    """
+    return B.head_forward(part.model, part.params, part.ae,
+                          part.split_layer, x)

@@ -1,0 +1,142 @@
+"""The split-point wire format: what actually crosses the network.
+
+Three payload kinds, all self-describing byte strings (header + payload)
+so the tail server can decode without out-of-band shape agreement:
+
+* ``f32``  — raw float32 activation (debug / exactness oracle);
+* ``int8`` — symmetric per-row int8 quantisation of the raw activation
+             (+ one f32 scale per row), no AE;
+* ``ae8``  — bottleneck-AE encoder projection fused with the int8
+             quantisation — the Pallas ``bottleneck_compress`` path,
+             routed through the pure-JAX reference on hosts without a TPU
+             (``kernels.bottleneck_compress.resolve_backend``).
+
+Decoding reverses the chain on the server: parse -> dequantise -> (AE
+decoder) -> boundary activation for ``Partition.tail``.
+"""
+from __future__ import annotations
+
+import struct
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bottleneck as B
+from repro.kernels.bottleneck_compress import bottleneck_compress_any
+
+MAGIC = b"SEI1"
+_KINDS = ("f32", "int8", "ae8")
+
+
+@dataclass(frozen=True)
+class WirePacket:
+    """Decoded in-memory form of one wire transfer."""
+    kind: str                        # 'f32' | 'int8' | 'ae8'
+    shape: tuple                     # payload tensor shape (B, *spatial, L)
+    data: np.ndarray                 # f32 (kind f32) or int8 codes
+    scales: Optional[np.ndarray]     # f32 (N, 1) row scales (int8 kinds)
+
+    @property
+    def nbytes(self) -> int:
+        """Serialized size: header (6 + 4*ndim) + payload [+ scales]."""
+        n = 6 + 4 * len(self.shape) + self.data.nbytes
+        return n + (self.scales.nbytes if self.scales is not None else 0)
+
+
+# ----------------------------------------------------------- encode side ----
+def encode_activation(f: jax.Array, ae: Optional[dict] = None, *,
+                      quantize: bool = True,
+                      backend: Optional[str] = None) -> WirePacket:
+    """Edge-side codec: boundary activation -> wire packet.
+
+    ``ae`` present: AE-encoder + int8 (kind ``ae8``, the compressed wire of
+    paper §III with DESIGN.md §3's quantisation).  ``ae`` absent: raw int8
+    (kind ``int8``) or raw f32 when ``quantize=False``.
+    """
+    if ae is not None:
+        q, s = bottleneck_compress_any(
+            jnp.asarray(f, jnp.float32), ae["enc"]["w"], ae["enc"]["b"],
+            backend=backend)
+        return WirePacket("ae8", tuple(q.shape), np.asarray(q),
+                          np.asarray(s).reshape(-1, 1))
+    if not quantize:
+        return WirePacket("f32", tuple(f.shape),
+                          np.asarray(f, np.float32), None)
+    q, s = _quantize_rows(jnp.asarray(f, jnp.float32))
+    return WirePacket("int8", tuple(q.shape), np.asarray(q),
+                      np.asarray(s).reshape(-1, 1))
+
+
+def _quantize_rows(f: jax.Array, scale: float = 127.0) -> tuple:
+    """Symmetric per-row int8 over the channel axis (no projection).
+
+    Returns ``(q int8 shaped like f, scales f32 (N, 1))``.
+    """
+    f2 = f.reshape(-1, f.shape[-1])
+    amax = jnp.max(jnp.abs(f2), axis=-1, keepdims=True)
+    s = jnp.where(amax > 0, amax / scale, 1.0)
+    q = jnp.clip(jnp.round(f2 / s), -127, 127).astype(jnp.int8)
+    return q.reshape(f.shape), s
+
+
+# ----------------------------------------------------------- byte format ----
+def to_bytes(pkt: WirePacket) -> bytes:
+    """Serialise: MAGIC | kind u8 | ndim u8 | dims u32* | payload [| scales]."""
+    kind_id = _KINDS.index(pkt.kind)
+    head = MAGIC + struct.pack("<BB", kind_id, len(pkt.shape))
+    head += struct.pack(f"<{len(pkt.shape)}I", *pkt.shape)
+    body = np.ascontiguousarray(pkt.data).tobytes()
+    if pkt.scales is not None:
+        body += np.ascontiguousarray(pkt.scales, np.float32).tobytes()
+    return head + body
+
+
+def from_bytes(buf: bytes) -> WirePacket:
+    if buf[:4] != MAGIC:
+        raise ValueError("not a split-wire payload (bad magic)")
+    kind_id, ndim = struct.unpack_from("<BB", buf, 4)
+    kind = _KINDS[kind_id]
+    shape = struct.unpack_from(f"<{ndim}I", buf, 6)
+    off = 6 + 4 * ndim
+    n_elems = int(np.prod(shape))
+    if kind == "f32":
+        data = np.frombuffer(buf, np.float32, n_elems, off).reshape(shape)
+        return WirePacket(kind, shape, data, None)
+    data = np.frombuffer(buf, np.int8, n_elems, off).reshape(shape)
+    n_rows = n_elems // shape[-1]
+    scales = np.frombuffer(buf, np.float32, n_rows,
+                           off + n_elems).reshape(n_rows, 1)
+    return WirePacket(kind, shape, data, scales)
+
+
+# ----------------------------------------------------------- decode side ----
+def decode_activation(pkt: WirePacket, ae: Optional[dict] = None,
+                      corrupt_mask: Optional[np.ndarray] = None) -> jax.Array:
+    """Server-side codec: wire packet -> boundary activation.
+
+    ``corrupt_mask`` (flat, 1=keep) zeroes lost UDP chunks *on the wire
+    representation* before dequantisation — same receiver semantics as
+    ``netsim.simulator.chunk_mask_from_packets``.
+    """
+    data = pkt.data
+    if corrupt_mask is not None:
+        data = data * corrupt_mask.reshape(data.shape).astype(data.dtype)
+    if pkt.kind == "f32":
+        return jnp.asarray(data)
+    z2 = data.reshape(-1, pkt.shape[-1]).astype(np.float32) * pkt.scales
+    z = jnp.asarray(z2.reshape(pkt.shape))
+    if pkt.kind == "ae8":
+        if ae is None:
+            raise ValueError("ae8 payload needs the bottleneck AE to decode")
+        return B.decode(ae, z)
+    return z
+
+
+def roundtrip(f: jax.Array, ae: Optional[dict] = None, *,
+              quantize: bool = True) -> jax.Array:
+    """encode -> bytes -> parse -> decode (the full wire path, no network)."""
+    return decode_activation(
+        from_bytes(to_bytes(encode_activation(f, ae, quantize=quantize))), ae)

@@ -28,6 +28,47 @@ from repro.models.layers import (apply_rope, decode_attention, dense,
                                  rope_tables)
 
 
+class SlotPool:
+    """Fixed pool of batch slots with iteration-level admit/release.
+
+    The scheduling discipline both batched servers share: a static number
+    of slots (so the jitted step compiles once), occupancy tracked per
+    slot, freed slots refilled immediately.  ``ContinuousBatcher`` uses it
+    for decode streams; ``repro.runtime.engine.TailServer`` uses it to
+    batch split-runtime tail requests from many edge clients.
+    """
+
+    def __init__(self, n_slots: int):
+        assert n_slots >= 1
+        self.n_slots = n_slots
+        self.items: List[Optional[object]] = [None] * n_slots
+
+    def free_slots(self) -> List[int]:
+        return [i for i, it in enumerate(self.items) if it is None]
+
+    def admit(self, item) -> int:
+        """Place ``item`` in the first free slot; returns the slot index."""
+        free = self.free_slots()
+        if not free:
+            raise RuntimeError("slot pool full")
+        self.items[free[0]] = item
+        return free[0]
+
+    def release(self, slot: int):
+        item, self.items[slot] = self.items[slot], None
+        return item
+
+    def occupied(self) -> List[tuple]:
+        """(slot, item) pairs for every active slot."""
+        return [(i, it) for i, it in enumerate(self.items) if it is not None]
+
+    def any_active(self) -> bool:
+        return any(it is not None for it in self.items)
+
+    def __len__(self) -> int:
+        return self.n_slots
+
+
 @dataclass
 class StreamRequest:
     rid: int
@@ -122,10 +163,14 @@ class ContinuousBatcher:
         self.n_slots, self.cache_len = n_slots, cache_len
         self.cache = T.init_cache(cfg, n_slots, cache_len)
         self.pos = jnp.zeros((n_slots,), jnp.int32)
-        self.active: List[Optional[StreamRequest]] = [None] * n_slots
+        self.pool = SlotPool(n_slots)
         self.token = jnp.zeros((n_slots, 1), jnp.int32)
         self._step = jax.jit(lambda p, c, t, pos: serve_step_multi(
             p, cfg, c, t, pos))
+
+    @property
+    def active(self) -> List[Optional[StreamRequest]]:
+        return self.pool.items
 
     def _slot_cache(self, fn):
         """Apply fn(leaf)->leaf to the cache pytree."""
@@ -144,33 +189,30 @@ class ContinuousBatcher:
         nxt = int(jnp.argmax(logits[0]))
         req.out.append(nxt)
         self.token = self.token.at[slot, 0].set(nxt)
-        self.active[slot] = req
+        self.pool.items[slot] = req
 
     def run(self, requests: List[StreamRequest], max_ticks: int = 256):
         """Drive arrivals + decode until all requests finish."""
         pending = sorted(requests, key=lambda r: r.arrival)
         tick = 0
         finished = []
-        while (pending or any(self.active)) and tick < max_ticks:
+        while (pending or self.pool.any_active()) and tick < max_ticks:
             # admissions
-            for slot in range(self.n_slots):
-                if self.active[slot] is None and pending \
-                        and pending[0].arrival <= tick:
+            for slot in self.pool.free_slots():
+                if pending and pending[0].arrival <= tick:
                     self._admit(pending.pop(0), slot)
-            if any(self.active):
+            if self.pool.any_active():
                 logits, self.cache = self._step(self.params, self.cache,
                                                 self.token, self.pos)
                 nxt = jnp.argmax(logits, -1).astype(jnp.int32)
                 self.pos = self.pos + jnp.asarray(
                     [1 if r is not None else 0 for r in self.active], jnp.int32)
                 self.token = nxt[:, None]
-                for slot, req in enumerate(self.active):
-                    if req is None:
-                        continue
+                for slot, req in self.pool.occupied():
                     req.out.append(int(nxt[slot]))
                     if len(req.out) >= req.max_new:
                         req.done = True
                         finished.append(req)
-                        self.active[slot] = None
+                        self.pool.release(slot)
             tick += 1
         return finished

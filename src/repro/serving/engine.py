@@ -60,6 +60,17 @@ class BatchCostModel:
         return cls(float(flops), platform.flops_per_s,
                    fixed_overhead_s=fixed_overhead_s)
 
+    @classmethod
+    def from_measured(cls, seconds_per_item: float, flops_per_s: float, *,
+                      fixed_overhead_s: float = 2e-4) -> "BatchCostModel":
+        """Cost model anchored to a *measured* per-item service time
+        (hardware-in-the-loop: the wall clock of the executed tail stage,
+        see ``repro.runtime.calibrate``).  ``flops_per_item`` is
+        back-derived so FLOPs-rate reporting stays meaningful."""
+        assert seconds_per_item > 0
+        return cls(seconds_per_item * flops_per_s, flops_per_s,
+                   fixed_overhead_s=fixed_overhead_s)
+
 
 class ServingEngine:
     """Static-batch engine: pad prompts, prefill once, decode greedily."""

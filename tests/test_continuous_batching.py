@@ -3,7 +3,6 @@ request alone (greedy decode is deterministic)."""
 import dataclasses
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

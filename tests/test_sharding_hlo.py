@@ -10,7 +10,6 @@ from repro.configs.shapes import SHAPES, batch_struct, input_specs
 from repro.launch.hlo_cost import HloCost, parse_module
 from repro.launch.mesh import make_host_mesh
 from repro.models import transformer as T
-from repro.models.common import reduced
 from repro.sharding import rules
 
 
@@ -47,12 +46,11 @@ def test_whisper_heads_fall_back_to_replicated():
     cfg = get_config("whisper-tiny")
     ps = jax.eval_shape(lambda k: T.init_params(k, cfg),
                         jax.ShapeDtypeStruct((2,), jnp.uint32))
-    specs = rules.param_specs(ps, mesh)
+    rules.param_specs(ps, mesh)
     # d_model=384 divides 16? 384/16=24 -> yes on 'data'/'model' axes; but
     # H*hd = 384 also divides; the kv_pos cache spec is the whisper risk
     cache = jax.eval_shape(lambda: T.init_cache(cfg, 128, 100))
     cspecs = rules.cache_specs(cache, mesh)
-    flat = jax.tree.leaves_with_path(cspecs) if hasattr(jax.tree, "leaves_with_path") else []
     # cross-attn cache n_frames=1500 is not divisible by 16 -> None there
     ck_spec = cspecs["l0"]["ck"]
     assert ck_spec[2] is None

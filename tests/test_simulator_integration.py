@@ -2,7 +2,6 @@
 CS curve -> candidates -> netsim -> QoS suggestion (paper Fig. 1 flow)."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.core import bottleneck as B

@@ -1,5 +1,4 @@
 """Split execution + bottleneck AE tests (paper §III Eqs. 3-4)."""
-import itertools
 
 import jax
 import jax.numpy as jnp

@@ -8,7 +8,6 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.data.synthetic import toy_images, token_batch, token_iter
-from repro.models import transformer as T
 from repro.models.common import reduced
 from repro.training import checkpoint as ckpt
 from repro.training.optimizer import (OptConfig, adam_init, adam_update,
@@ -35,9 +34,21 @@ def test_adamw_weight_decay_shrinks():
 
 
 def test_grad_clip():
-    oc = OptConfig(lr=1.0, grad_clip=1.0)
+    """Clipping actually bounds the applied update: with wd=0, b1=0 the
+    first Adam step moves each weight by at most ~lr regardless of the
+    raw gradient norm, and the clipped-gradient step matches the step a
+    pre-scaled gradient would take."""
     g = {"w": jnp.ones((100,)) * 100}
-    assert float(global_norm(g)) > 1.0
+    gn = float(global_norm(g))
+    assert gn > 1.0
+    params = {"w": jnp.zeros((100,))}
+    oc = OptConfig(lr=1.0, grad_clip=1.0, weight_decay=0.0)
+    st = adamw_init(params, oc)
+    p_clip, _ = adamw_update(params, g, st, oc)
+    g_scaled = {"w": g["w"] / gn}
+    p_ref, _ = adamw_update(params, g_scaled, adamw_init(params, oc), oc)
+    np.testing.assert_allclose(np.asarray(p_clip["w"]),
+                               np.asarray(p_ref["w"]), rtol=1e-5)
 
 
 def test_lm_training_loss_decreases():
