@@ -71,7 +71,7 @@ def run(fast: bool = False, out_path: str = None) -> list:
         res = rt.infer(x, iters=iters)
         sc = Scenario("SC", SplitPlan(split))
         flow_m = measure_flow(sc, netcfg, model, params, input_bytes,
-                              calibration=table, batch=batch)
+                              cost=table, batch=batch)
         flow_a = measure_flow(sc, netcfg, model, params, input_bytes,
                               batch=batch)
         exec_s = res.total_s

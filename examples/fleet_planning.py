@@ -1,18 +1,18 @@
-"""Fleet-scale deployment planning: which splits for this *population*?
+"""Fleet-scale deployment planning through ``repro.api``: which splits
+for this *population*?
 
-The single-link examples (quickstart, protocol_selection) answer "which
-design for one client".  This one scales the question to a deployment:
+The single-link quickstart answers "which design for one client".  This
+one scales the question to a deployment with one Study object:
 
-  1. train the model, compute the CS curve, pick candidate split points,
-  2. train bottleneck AEs for the top CS-ranked cuts,
+  1. ``fit`` + ``profile`` + ``candidates``: CS curve and split points,
+  2. ``bottlenecks``: AEs for the top CS-ranked cuts,
   3. describe the fleet — three device classes behind different channels —
      and generate a 1000-request diurnal trace over the mix,
-  4. search split x protocol x batch x replicas per device class: accuracy
-     measured by ``netsim`` (real forwards on loss-corrupted tensors),
-     queueing by the ``fleet.cluster`` discrete-event model (both on the
-     one shared ``EventQueue`` implementation),
-  5. print the per-class Pareto front over (p99, accuracy, server FLOPs/s),
-  6. ``suggest()`` one QoS-feasible plan per class and jointly validate
+  4. ``simulate(fleet=...)``: search split x protocol x batch x replicas
+     per device class (accuracy measured by netsim on loss-corrupted
+     tensors, queueing by the fleet cluster model),
+  5. ``pareto()``: the per-class front over (p99, accuracy, server FLOPs/s),
+  6. ``suggest()`` one QoS-feasible plan per class, then jointly validate
      the chosen plans against the mixed trace on shared replicas.
 
 Run:  PYTHONPATH=src python examples/fleet_planning.py
@@ -20,42 +20,27 @@ Run:  PYTHONPATH=src python examples/fleet_planning.py
 import os
 import sys
 
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import jax.numpy as jnp
-
-from benchmarks.common import trained_vgg, vgg_test_accuracy
-from repro.core import bottleneck as B
-from repro.core.qos import QoSRequirements
-from repro.core.saliency import candidate_split_points, cumulative_saliency
-from repro.data.synthetic import toy_image_iter, toy_images
-from repro.fleet import DeviceClass, DeploymentPlanner, SearchSpace, generate_trace
-from repro.fleet.planner import simulate_deployment
-from repro.models.vgg import feature_index
-from repro.netsim.channel import Channel, INTERFACES
+from repro.api import (Channel, DeviceClass, INTERFACES, QoSRequirements,
+                       Study, generate_trace, simulate_deployment,
+                       toy_image_iter, toy_images)
 
 
 def main():
     print("== 1. model + CS curve ==")
-    model, params = trained_vgg(steps=300)
-    print(f"   test accuracy: {vgg_test_accuracy(model, params):.3f}")
     xs, ys = toy_images(64, hw=16, seed=55)
-    fi = feature_index(model)
-    cs = cumulative_saliency(model, params, jnp.asarray(xs), jnp.asarray(ys),
-                             layer_idx=fi)
-    cands = candidate_split_points(model, cs, fi, top_n=3)
-    if not cands:
-        cands = [sp for sp in fi if sp in set(model.cut_points())][2:8:2]
+    lc = Study("vgg16").fit(steps=30)
+    study = Study("vgg16", data=(xs[:32], ys[:32]),
+                  lc=(lc.model, lc.params)).fit(steps=300)
+    print(f"   test accuracy: {study.eval_accuracy():.3f}")
+    study.profile().candidates(top_n=3)
+    cands = [c.split_layer for c in study.split_candidates()]
     print(f"   candidate split points: {cands}")
 
     print("== 2. bottleneck AEs for the top cuts ==")
-    ae_map = {}
-    it = map(lambda t: (jnp.asarray(t[0]), jnp.asarray(t[1])),
-             toy_image_iter(32, hw=16, seed=9))
-    for cut in cands[:2]:
-        ae_map[cut], _ = B.train_bottleneck(model, params, cut, it,
-                                            steps=150, lr=2e-3)
+    study.bottlenecks(steps=150, lr=2e-3, cuts=cands[:2],
+                      data_iter=toy_image_iter(32, hw=16, seed=9))
 
     print("== 3. the fleet: 3 device classes, 1000-request diurnal trace ==")
     mix = [
@@ -82,17 +67,11 @@ def main():
           f"mean rate {trace.mean_rate_hz():.0f} req/s")
 
     print("== 4. search split x protocol x batch x replicas ==")
-    lc_model, lc_params = trained_vgg(steps=30)
-    planner = DeploymentPlanner(model, params, cs_curve=cs, layer_idx=fi,
-                                ae_map=ae_map, eval_data=(xs[:32], ys[:32]),
-                                lc_model=lc_model, lc_params=lc_params)
-    space = SearchSpace(split_points=tuple(cands),
-                        protocols=("tcp", "udp"),
-                        batch_sizes=(1, 8, 32),
-                        replica_counts=(1, 2),
-                        top_k_splits=2, include_rc=True, include_lc=True)
-    points = planner.search(trace, mix, space)
-    print(f"   evaluated {len(points)} deployment options")
+    study.simulate(fleet=(trace, mix),
+                   protocols=("tcp", "udp"), batch_sizes=(1, 8, 32),
+                   replica_counts=(1, 2), top_k_splits=2,
+                   include_rc=True, include_lc=True)
+    print(f"   evaluated {len(study.plan_points)} deployment options")
 
     qos = QoSRequirements(max_latency_s=0.05, min_accuracy=0.5)
     print(f"== 5. Pareto front (QoS: p99 <= {qos.max_latency_s * 1e3:.0f} ms, "
@@ -100,7 +79,7 @@ def main():
     hdr = (f"   {'device':18s} {'design':7s} {'proto':5s} {'b':>3s} {'r':>2s} "
            f"{'p50 ms':>8s} {'p99 ms':>8s} {'acc':>6s} {'srv GFLOP/s':>12s}  qos")
     print(hdr)
-    for p in planner.pareto_front(points):
+    for p in study.pareto():
         print(f"   {p.device:18s} {p.label:7s} {str(p.protocol):5s} "
               f"{p.max_batch:3d} {p.n_replicas:2d} {p.p50_s * 1e3:8.2f} "
               f"{p.p99_s * 1e3:8.2f} {p.accuracy:6.3f} "
@@ -108,7 +87,7 @@ def main():
               f"{'YES' if p.satisfies(qos) else 'no'}")
 
     print("== 6. suggested per-class plans + joint validation ==")
-    plans = planner.suggest(qos, (trace, mix), space, points=points)
+    plans = study.suggest(qos)
     feasible = 0
     for name, p in plans.items():
         if p is None:
@@ -119,7 +98,7 @@ def main():
             print(f"   {name:18s} -> {p.label} over {p.protocol}, "
                   f"batch {p.max_batch}, {p.n_replicas} replica(s): "
                   f"p99 {p.p99_s * 1e3:.2f} ms, acc {p.accuracy:.3f}")
-    report = simulate_deployment(plans, trace, mix, planner)
+    report = simulate_deployment(plans, trace, mix, study.planner)
     for (split, b, r, _w), g in sorted(report.items(),
                                        key=lambda kv: str(kv[0])):
         print(f"   shared cluster split={split} batch={b} replicas={r}: "

@@ -1,9 +1,12 @@
-"""Quickstart: the full Split-Et-Impera design flow in one script.
+"""Quickstart: the full Split-Et-Impera design flow through ``repro.api``.
+
+One ``Study`` object carries the whole pipeline (paper Fig. 1):
 
   1. train a small VGG on the conveyor-belt toy task (paper §V scenario),
   2. compute the Grad-CAM Cumulative Saliency curve (Fig. 1-i),
   3. pick candidate split points at the CS local maxima,
-  4. simulate LC / RC / SC over a TCP channel (Fig. 1-ii),
+  4. train bottleneck AEs and simulate LC / RC / SC over a TCP channel
+     (Fig. 1-ii),
   5. let the QoS matcher suggest the best design (Fig. 1-iii).
 
 Run:  PYTHONPATH=src python examples/quickstart.py
@@ -11,70 +14,45 @@ Run:  PYTHONPATH=src python examples/quickstart.py
 import os
 import sys
 
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import jax.numpy as jnp
-
-from benchmarks.common import trained_vgg, vgg_test_accuracy
-from repro.core import bottleneck as B
-from repro.core.qos import QoSRequirements, rank_candidates, suggest
-from repro.core.saliency import candidate_split_points, cumulative_saliency
-from repro.core.scenarios import PLATFORMS, Scenario
-from repro.core.split import SplitPlan
-from repro.data.synthetic import toy_images
-from repro.models.vgg import feature_index
-from repro.netsim.channel import Channel
-from repro.netsim.simulator import ApplicationSimulator, NetworkConfig
+from repro.api import (Channel, NetworkConfig, QoSRequirements, Study,
+                       toy_image_iter, toy_images)
 
 
 def main():
     print("== 1. train the model (paper §V: Adam, lr 5e-3) ==")
-    model, params = trained_vgg(steps=300)
-    print(f"   test accuracy: {vgg_test_accuracy(model, params):.3f}")
+    xs, ys = toy_images(64, hw=16, seed=55)
+    # LC runs a weaker local model (the whole point of the LC/RC trade-off)
+    lc = Study("vgg16").fit(steps=30)
+    study = Study("vgg16", data=(xs[:32], ys[:32]),
+                  lc=(lc.model, lc.params)).fit(steps=300)
+    print(f"   test accuracy: {study.eval_accuracy():.3f}")
 
     print("== 2. cumulative saliency curve ==")
-    xs, ys = toy_images(64, hw=16, seed=55)
-    fi = feature_index(model)
-    cs = cumulative_saliency(model, params, jnp.asarray(xs), jnp.asarray(ys),
-                             layer_idx=fi)
-    for l, v in zip(fi, cs):
+    study.profile()
+    for l, v in zip(study.layer_idx, study.cs_curve):
         print(f"   layer {l:2d}: {'#' * int(v * 40)} {v:.3f}")
 
     print("== 3. candidate split points (CS local maxima) ==")
-    cands = candidate_split_points(model, cs, fi, top_n=3)
-    if not cands:
-        cands = model.cut_points()[5:14:4]
-    print("   candidates:", cands)
-    ranked = rank_candidates(cs, fi, cands)
-    for c in ranked:
+    study.candidates(top_n=3)
+    for c in study.candidate_list:
         print(f"   {c.label:8s} accuracy proxy {c.accuracy_proxy:.3f}")
 
     print("== 4. communication-aware simulation (TCP, 1 Gb/s, 2% loss) ==")
-    net = NetworkConfig("tcp", Channel(100e-6, 1e9, 1e9, loss_rate=0.02, seed=0))
-    verdicts = []
-    # LC runs a weaker local model (the whole point of the LC/RC trade-off)
-    lc_model, lc_params = trained_vgg(steps=30)
-    sim = ApplicationSimulator(model, params, net,
-                               lc_model=lc_model, lc_params=lc_params)
-    verdicts.append(sim.simulate(Scenario("RC"), xs[:32], ys[:32], n_frames=8))
-    verdicts.append(sim.simulate(Scenario("LC"), xs[:32], ys[:32]))
-    from repro.data.synthetic import toy_image_iter
-    it = map(lambda t: (jnp.asarray(t[0]), jnp.asarray(t[1])),
-             toy_image_iter(32, hw=16, seed=9))
-    for cut in cands[:2]:
-        ae, _ = B.train_bottleneck(model, params, cut, it, steps=150, lr=2e-3)
-        sc_sim = ApplicationSimulator(model, params, net, ae=ae)
-        verdicts.append(sc_sim.simulate(
-            Scenario("SC", SplitPlan(cut), PLATFORMS["edge-accelerator"],
-                     PLATFORMS["server-gpu"]), xs[:32], ys[:32], n_frames=8))
-    for v in verdicts:
+    study.bottlenecks(steps=150, lr=2e-3,
+                      data_iter=toy_image_iter(32, hw=16, seed=9))
+    net = NetworkConfig("tcp", Channel(100e-6, 1e9, 1e9, loss_rate=0.02,
+                                       seed=0))
+    study.simulate(network=net)
+    for v in study.verdicts:
         print(f"   {v.candidate.label:8s} latency {v.latency_s * 1e3:8.2f} ms  "
-              f"accuracy {v.accuracy:.3f}  wire {v.meta.get('wire_bytes', 0):>8d} B")
+              f"accuracy {v.accuracy:.3f}  "
+              f"wire {v.meta.get('wire_bytes', 0):>8d} B")
 
     print("== 5. QoS suggestion (20 FPS, accuracy >= 0.5) ==")
     qos = QoSRequirements(max_latency_s=0.05, min_accuracy=0.5)
-    best = suggest(verdicts, qos)
+    best = study.suggest(qos)
     if best is None:
         print("   no design meets the constraints — relax QoS or change network")
     else:

@@ -1,15 +1,16 @@
-"""Live split-execution at a planner-suggested cut, end-to-end on CPU.
+"""Live split-execution at a planner-suggested cut, end-to-end on CPU —
+driven entirely through the ``repro.api`` Study facade.
 
 The full calibrated-planning loop in one script:
 
- 1. the fleet planner searches split x protocol x batch x replicas and
-    suggests a deployment for an edge device class;
- 2. the live runtime *executes* that cut: head forward, bottleneck int8
+ 1. ``simulate(fleet=...)`` searches split x protocol x batch x replicas
+    and ``suggest`` picks a deployment for an edge device class;
+ 2. ``deploy()`` *executes* that cut live: head forward, bottleneck int8
     wire (Pallas kernel path, auto-routed to the pure-JAX reference on
     CPU), netsim-priced transfer, tail forward;
- 3. the runtime's measurements become a CalibrationTable, the simulator
-    re-costs the same flow with ``cost_source="measured"``, and the two
-    latencies are compared;
+ 3. ``calibrate()`` turns the runtime's measurements into a
+    CalibrationTable; re-running ``simulate`` then prices the same flow
+    from measurements, and the two latencies are compared;
  4. five edge clients share one TailServer, batching tail requests
     through the slot pool.
 
@@ -17,62 +18,46 @@ Run:  PYTHONPATH=src python examples/split_runtime.py
 """
 import os
 import sys
+from dataclasses import replace
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import jax
 import numpy as np
 
-from repro.core.qos import QoSRequirements
-from repro.core.scenarios import Scenario
-from repro.core.split import SplitPlan
-from repro.fleet import (DeviceClass, DeploymentPlanner, SearchSpace,
-                         generate_trace)
-from repro.models.vgg import feature_index, vgg_cifar
-from repro.netsim.channel import Channel
-from repro.netsim.simulator import (NetworkConfig, flow_latency_s,
-                                    measure_flow)
-from repro.runtime import SplitRuntime, calibrate, run_clients
+from repro.api import (Channel, DeviceClass, QoSRequirements, Study,
+                       StudyScenario, generate_trace, run_clients)
 
 
 def main():
-    model = vgg_cifar(n_classes=8, input_hw=16, width_mult=0.25)
-    params = model.init(jax.random.PRNGKey(0))
+    channel = Channel(5e-4, 100e6, 100e6, loss_rate=0.02, seed=2)
+    study = Study("vgg16", StudyScenario(edge="edge-embedded",
+                                         channel=channel))
+    model = study.model
     print(f"model: {model.name}, {len(model.layers)} layers, "
           f"legal cuts {model.cut_points()}")
 
     # --- 1. planner suggests a cut for the edge class ------------------
-    def accuracy_fn(scenario, netcfg):        # analytic proxy (no training)
-        base = 0.9 if scenario.kind != "LC" else 0.6
-        return base - (netcfg.channel.loss_rate
-                       if netcfg.protocol == "udp" else 0.0)
-
-    fi = feature_index(model)
-    cs = np.linspace(1.0, 0.3, len(fi))
-    device = DeviceClass.make(
-        "edge-embedded", Channel(5e-4, 100e6, 100e6, loss_rate=0.02, seed=2))
-    planner = DeploymentPlanner(model, params, cs_curve=cs, layer_idx=fi,
-                                accuracy_fn=accuracy_fn,
-                                input_bytes=16 * 16 * 3 * 4)
-    legal = set(model.cut_points())
-    sps = tuple(sp for sp in fi if sp in legal)[:4]
+    device = DeviceClass.make("edge-embedded", channel)
     trace = generate_trace([device], 200, 60.0, seed=0)
-    plans = planner.suggest(QoSRequirements(max_latency_s=0.2,
-                                            min_accuracy=0.5),
-                            (trace, [device]),
-                            SearchSpace(split_points=sps, include_rc=False))
+    study.profile().candidates(top_n=4)
+    study.simulate(fleet=(trace, [device]), include_rc=False,
+                   batch_sizes=(1, 8), replica_counts=(1, 2))
+    plans = study.suggest(QoSRequirements(max_latency_s=0.2,
+                                          min_accuracy=0.1))
     plan = plans[device.name]
     assert plan is not None, "planner found no feasible deployment"
     split = plan.split_layer
     print(f"planner suggests {plan.label} over {plan.protocol} "
           f"(batch={plan.max_batch}, replicas={plan.n_replicas}, "
           f"p99={plan.p99_s * 1e3:.2f} ms) -> executing cut {split}")
+    # the simulated-vs-executed comparison below must price the wire over
+    # the protocol the runtime actually executes with
+    study.scenario = replace(study.scenario, protocol=plan.protocol or "tcp")
 
     # --- 2. execute the suggested cut live -----------------------------
     rng = np.random.default_rng(0)
     x = rng.standard_normal((1, 16, 16, 3)).astype(np.float32)
-    rt = SplitRuntime(model, params, split, channel=device.channel,
-                      protocol=plan.protocol or "tcp", quantize=True)
+    rt = study.deploy(device=device.name)
     res = rt.infer(x, iters=5)
     ref = rt.reference(x)
     agree = (np.argmax(res.logits, -1) == np.argmax(ref, -1)).all()
@@ -82,22 +67,24 @@ def main():
           f"argmax agrees with unsplit: {agree}")
 
     # --- 3. calibrate the simulator with the measurements --------------
-    table = calibrate(model, params, [split], x=x, iters=5)
-    netcfg = NetworkConfig(plan.protocol or "tcp", device.channel)
-    sc = Scenario("SC", SplitPlan(split))
-    flow_m = measure_flow(sc, netcfg, model, params, x.nbytes,
-                          calibration=table)
-    flow_a = measure_flow(sc, netcfg, model, params, x.nbytes)
-    pm, pa = flow_latency_s(flow_m), flow_latency_s(flow_a)
-    print(f"simulator: measured-cost {pm * 1e3:.3f} ms "
+    def sc_latency(s: Study) -> tuple:
+        v = next(v for v in s.verdicts if v.candidate.split_layer == split)
+        return v.latency_s, v.meta["cost_source"]
+
+    study.simulate()                       # analytic costs (study link)
+    pa, src_a = sc_latency(study)
+    study.calibrate(splits=[split], iters=5)
+    study.simulate()                       # same link, measured costs
+    pm, src_m = sc_latency(study)
+    print(f"simulator: {src_m}-cost {pm * 1e3:.3f} ms "
           f"({abs(pm - res.total_s) / res.total_s * 100:.1f}% off executed) "
-          f"vs analytic {pa * 1e3:.3f} ms "
+          f"vs {src_a} {pa * 1e3:.3f} ms "
           f"({abs(pa - res.total_s) / res.total_s * 100:.1f}% off)")
 
     # --- 4. five clients, one batched tail server ----------------------
     clients = [rng.standard_normal((1, 16, 16, 3)).astype(np.float32)
                for _ in range(5)]
-    results, server = run_clients(model, params, split, clients,
+    results, server = run_clients(study.model, study.params, split, clients,
                                   n_slots=2, quantize=True)
     occ = ",".join(map(str, server.occupancy))
     print(f"multi-client: {server.n_served} tail requests in "

@@ -1,6 +1,13 @@
 """Split-Et-Impera in JAX.
 
-Public API entry points:
+The one-stop entry point is the ``repro.api`` facade:
+
+    from repro.api import Study, QoSRequirements, Channel
+
+    best = Study("vgg16", data=(xs, ys)).profile().candidates() \\
+        .simulate().suggest(QoSRequirements(max_latency_s=0.05))
+
+The subsystems underneath remain importable directly:
 
     from repro.configs import get_config
     from repro.core import saliency, split, bottleneck, qos

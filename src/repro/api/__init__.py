@@ -1,0 +1,71 @@
+"""``repro.api`` — the one-stop facade for the Split-Et-Impera pipeline.
+
+    from repro.api import Study, QoSRequirements, Channel
+
+    study = Study("vgg16", data=(xs, ys))
+    verdict = (study.profile()          # CS curve (Grad-CAM saliency)
+                    .candidates()       # legal cuts, LC/RC ranked
+                    .calibrate()        # optional: measured cost tables
+                    .simulate()         # netsim single link (or fleet=...)
+                    .suggest(qos))      # Pareto + best QoS match
+    runtime = study.deploy()            # ready SplitRuntime for the cut
+
+Everything an end-to-end script needs is re-exported here, so examples
+and downstream users import from ``repro.api`` only.
+
+Attribute access is lazy (PEP 562): ``core.qos`` imports
+``repro.api.types`` at import time, so this package initialiser must not
+eagerly import the facade (which imports ``core.qos`` back).
+"""
+from __future__ import annotations
+
+_EXPORTS = {
+    # the facade
+    "Study": ("repro.api.study", "Study"),
+    "StudyScenario": ("repro.api.study", "StudyScenario"),
+    # the shared type layer
+    "SplitCandidate": ("repro.api.types", "SplitCandidate"),
+    "CostModel": ("repro.api.types", "CostModel"),
+    "AnalyticCost": ("repro.api.types", "AnalyticCost"),
+    "CostStack": ("repro.api.types", "CostStack"),
+    "legal_split_candidates": ("repro.api.types", "legal_split_candidates"),
+    # the vocabulary end-to-end scripts need
+    "QoSRequirements": ("repro.core.qos", "QoSRequirements"),
+    "SimVerdict": ("repro.core.qos", "SimVerdict"),
+    "SplitPlan": ("repro.core.split", "SplitPlan"),
+    "Scenario": ("repro.core.scenarios", "Scenario"),
+    "PLATFORMS": ("repro.core.scenarios", "PLATFORMS"),
+    "Channel": ("repro.netsim.channel", "Channel"),
+    "INTERFACES": ("repro.netsim.channel", "INTERFACES"),
+    "NetworkConfig": ("repro.netsim.simulator", "NetworkConfig"),
+    "DeviceClass": ("repro.fleet.traffic", "DeviceClass"),
+    "generate_trace": ("repro.fleet.traffic", "generate_trace"),
+    "SearchSpace": ("repro.fleet.planner", "SearchSpace"),
+    "DeploymentPlanner": ("repro.fleet.planner", "DeploymentPlanner"),
+    "simulate_deployment": ("repro.fleet.planner", "simulate_deployment"),
+    "CalibrationTable": ("repro.runtime.calibrate", "CalibrationTable"),
+    "calibrate": ("repro.runtime.calibrate", "calibrate"),
+    # toy data for the runnable walkthroughs
+    "toy_images": ("repro.data.synthetic", "toy_images"),
+    "toy_image_iter": ("repro.data.synthetic", "toy_image_iter"),
+    "SplitRuntime": ("repro.runtime.engine", "SplitRuntime"),
+    "TailServer": ("repro.runtime.engine", "TailServer"),
+    "run_clients": ("repro.runtime.engine", "run_clients"),
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name: str):
+    try:
+        module, attr = _EXPORTS[name]
+    except KeyError:
+        raise AttributeError(f"module 'repro.api' has no attribute {name!r}")
+    import importlib
+    value = getattr(importlib.import_module(module), attr)
+    globals()[name] = value          # cache for subsequent lookups
+    return value
+
+
+def __dir__():
+    return __all__

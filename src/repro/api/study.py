@@ -1,0 +1,539 @@
+"""The ``Study`` facade: the whole Split-Et-Impera pipeline behind one
+typed, chainable object.
+
+Before this module, running the paper's workflow meant hand-stitching
+five subsystems — ``core.saliency`` -> ``core.qos.rank_candidates`` ->
+``netsim.measure_flow`` -> ``fleet.DeploymentPlanner`` ->
+``runtime.SplitRuntime`` — converting between their design-point
+representations at every seam.  A ``Study`` carries one
+:class:`~repro.api.types.SplitCandidate` per design point end-to-end:
+
+    study = Study("vgg16", data=(xs, ys))
+    best = (study.profile()            # CS curve (Grad-CAM saliency)
+                 .candidates()         # legal cuts + LC/RC, CS-ranked
+                 .calibrate()          # optional: measured cost tables
+                 .simulate()           # single link (or fleet=(trace, mix))
+                 .suggest(qos))        # Pareto + best QoS match
+    runtime = study.deploy()           # ready SplitRuntime for the cut
+
+Stages are lazily cached: each runs at most once unless called again
+explicitly, and any stage you skip is run on demand with defaults (so
+``Study(m).suggest(qos)`` is legal).  Re-running a stage invalidates the
+stages after it.
+
+Cost selection is uniform: after :meth:`calibrate`, *both* the
+single-link simulator and the fleet planner price flows from the
+measured :class:`~repro.runtime.calibrate.CalibrationTable`, falling
+back to the analytic FLOPs model for cells the grid didn't cover —
+``simulate`` never needs to know which source answered.
+
+``Study`` accepts a :class:`~repro.models.layered.LayeredModel`, a
+transformer ``ModelConfig`` (viewed through ``transformer_as_layered``),
+or a config name: ``"vgg16"`` builds the CPU-trainable VGG variant, any
+``repro.configs`` arch name (``"llama3.2-3b"``, ``"rwkv6-1.6b"``,
+``"whisper-tiny"``, ...) resolves through the registry and is reduced to
+its CPU-scale variant unless ``reduce=False``.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, replace
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.types import SplitCandidate, legal_split_candidates
+from repro.core import bottleneck as B
+from repro.core import qos as Q
+from repro.core.saliency import candidate_split_points, cumulative_saliency
+from repro.core.scenarios import PLATFORMS, PlatformProfile
+from repro.models.layered import LayeredModel
+from repro.netsim.channel import Channel
+from repro.netsim.simulator import (ApplicationSimulator, NetworkConfig,
+                                    flow_latency_s, measure_flow)
+
+_VGG_NAMES = ("vgg16", "vgg16-cifar10", "vgg")
+
+
+def _platform(p) -> PlatformProfile:
+    if isinstance(p, str):
+        if p not in PLATFORMS:
+            raise KeyError(f"unknown platform {p!r}; known: {sorted(PLATFORMS)}")
+        return PLATFORMS[p]
+    return p
+
+
+@dataclass(frozen=True)
+class StudyScenario:
+    """Where a Study's design points run: edge/server platforms and the
+    link between them.  Platforms may be given as ``core.scenarios``
+    profile names."""
+    edge: PlatformProfile = PLATFORMS["edge-embedded"]
+    server: PlatformProfile = PLATFORMS["server-gpu"]
+    channel: Channel = None
+    protocol: str = "tcp"
+    n_frames: int = 8
+
+    def __post_init__(self):
+        object.__setattr__(self, "edge", _platform(self.edge))
+        object.__setattr__(self, "server", _platform(self.server))
+        if self.channel is None:
+            # clean gigabit link, deterministic under the default seed
+            object.__setattr__(self, "channel", Channel(1e-4, 1e9, 1e9, seed=0))
+
+    def netcfg(self) -> NetworkConfig:
+        return NetworkConfig(self.protocol, self.channel)
+
+
+class Study:
+    """One end-to-end split-computing design study.  See module docstring."""
+
+    def __init__(self, model="vgg16", scenario: Optional[StudyScenario] = None,
+                 *, params=None, data=None, lc=None, seed=0, reduce=None,
+                 batch: Optional[int] = None, seq_len: int = 32,
+                 compression: float = 0.5):
+        self.scenario = scenario if scenario is not None else StudyScenario()
+        if not isinstance(self.scenario, StudyScenario):
+            raise TypeError("scenario must be a StudyScenario (use "
+                            "StudyScenario(edge=..., channel=...))")
+        self.seed = seed
+        self.compression = compression
+        self.lc_model, self.lc_params = lc if lc is not None else (None, None)
+        self._data = data
+        self._resolve_model(model, params, reduce, batch, seq_len)
+        # stage caches
+        self._cs = None
+        self._layer_idx = None
+        self._candidates = None
+        self._ae_map = {}
+        self._calibration = None
+        self._mode = None                # 'link' | 'fleet' after simulate()
+        self._verdicts = None
+        self._planner = None
+        self._fleet = None
+        self._points = None
+        self._suggested = None
+        self._plans = None
+
+    # ------------------------------------------------------- resolution ----
+    def _resolve_model(self, model, params, reduce, batch, seq_len):
+        self.cfg = None
+        if isinstance(model, str):
+            if model.lower() in _VGG_NAMES:
+                from repro.models.vgg import vgg_cifar
+                hw = (self._data[0].shape[1] if self._data is not None else 16)
+                model = vgg_cifar(n_classes=8, input_hw=hw, width_mult=0.25)
+            else:
+                from repro.configs import get_config
+                model = get_config(model)
+        if not isinstance(model, LayeredModel):     # a transformer ModelConfig
+            from repro.models import transformer as T
+            from repro.models.common import reduced
+            from repro.models.layered import transformer_as_layered
+            if reduce or reduce is None:
+                model = reduced(model, dtype="float32")
+            self.cfg = model
+            backbone = (params if params is not None
+                        else T.init_params(jax.random.PRNGKey(self.seed), model))
+            model = transformer_as_layered(model, backbone)
+            params = model.init(jax.random.PRNGKey(self.seed))
+        self.model = model
+        self.params = (params if params is not None
+                       else model.init(jax.random.PRNGKey(self.seed)))
+        self._build_sample(batch, seq_len)
+
+    def _build_sample(self, batch, seq_len):
+        """The example input the study profiles, costs and calibrates with
+        (``x``/``labels``), plus the per-frame input payload in bytes."""
+        rng = np.random.default_rng(self.seed)
+        if self.cfg is not None:                     # transformer batch dict
+            cfg, b = self.cfg, batch or 2
+            st = seq_len - (cfg.n_patches if cfg.family == "vlm" else 0)
+            x = {"tokens": jnp.asarray(
+                rng.integers(0, cfg.vocab, (b, st)), jnp.int32)}
+            if cfg.family == "vlm":
+                x["patch_embeds"] = jnp.asarray(
+                    rng.normal(size=(b, cfg.n_patches, cfg.d_frontend)),
+                    jnp.float32)
+            if cfg.family == "encdec":
+                x["frames"] = jnp.asarray(
+                    rng.normal(size=(b, cfg.n_frames, cfg.d_frontend)),
+                    jnp.float32)
+            self._x, self._labels = x, jnp.asarray(
+                rng.integers(0, cfg.vocab, (b, st)), jnp.int32)
+            leaves = jax.tree.leaves(x)
+            self._sample = x
+            self.input_bytes = sum(l.nbytes for l in leaves) // b
+        elif self._data is not None:                 # measured image data
+            xs, ys = self._data
+            n = min(len(xs), 32)
+            self._x = jnp.asarray(xs[:n])
+            self._labels = jnp.asarray(ys[:n])
+            self._sample = None                      # input_shape suffices
+            self.input_bytes = int(np.prod(xs.shape[1:])) * 4
+        else:                                        # synthetic image input
+            b = batch or 8
+            shape = (b,) + tuple(self.model.input_shape)
+            self._x = jnp.asarray(rng.standard_normal(shape), jnp.float32)
+            self._labels = jnp.asarray(
+                rng.integers(0, self.model.n_classes, b), jnp.int32)
+            self._sample = None
+            self.input_bytes = int(np.prod(shape[1:])) * 4
+
+    # ---------------------------------------------------------- training ----
+    def fit(self, *, steps: int = 300, lr: float = 5e-3, batch: int = 32,
+            data_iter=None) -> "Study":
+        """Train the backbone on the toy conveyor-belt task (paper §V
+        recipe: Adam, lr 5e-3) — image ``LayeredModel``\\ s only; the
+        transformer zoo trains through ``repro.training``.  ``data_iter``
+        overrides the synthetic stream with real ``(x, y)`` batches."""
+        if self.cfg is not None:
+            raise NotImplementedError(
+                "Study.fit trains image LayeredModels; train transformer "
+                "backbones with repro.training and pass params=")
+        from repro.training.optimizer import adam_init, adam_update
+        if data_iter is None:
+            from repro.data.synthetic import toy_image_iter
+            data_iter = toy_image_iter(batch, hw=self.model.input_shape[0],
+                                       seed=self.seed,
+                                       n_classes=self.model.n_classes)
+        model, opt = self.model, adam_init(self.params)
+
+        @jax.jit
+        def step(params, opt, x, y):
+            def lf(p):
+                logits = model.apply(p, x)
+                lse = jax.nn.logsumexp(logits, -1)
+                gold = jnp.take_along_axis(logits, y[:, None], 1)[:, 0]
+                return jnp.mean(lse - gold)
+            loss, g = jax.value_and_grad(lf)(params)
+            params, opt = adam_update(params, g, opt, lr)
+            return params, opt, loss
+
+        params = self.params
+        for _ in range(steps):
+            x, y = next(data_iter)
+            params, opt, _ = step(params, opt, jnp.asarray(x), jnp.asarray(y))
+        self.params = params
+        # trained weights invalidate every derived stage
+        self._cs = self._candidates = self._calibration = None
+        self._ae_map, self._mode = {}, None
+        return self
+
+    def eval_accuracy(self, data=None, n: int = 256) -> float:
+        """Top-1 accuracy of the current backbone on ``data`` (default: a
+        held-out draw of the toy task for image models, the study's own
+        sample batch otherwise)."""
+        if data is None:
+            if self.cfg is None and len(self.model.input_shape) == 3:
+                from repro.data.synthetic import toy_images
+                data = toy_images(n, hw=self.model.input_shape[0], seed=777,
+                                  n_classes=self.model.n_classes)
+            else:
+                data = (self._x, self._labels)
+        xs, ys = data
+        logits = np.asarray(self.model.apply(self.params, jax.tree.map(
+            jnp.asarray, xs)))
+        return float((logits.argmax(-1) == np.asarray(ys)).mean())
+
+    # ------------------------------------------------------------ stages ----
+    def profile(self, *, layer_idx: Optional[Sequence[int]] = None) -> "Study":
+        """Stage 1: the cumulative-saliency (CS) curve over ``layer_idx``
+        (default: conv/pool feature ops for CNNs, blocks for transformer
+        views) — the paper's accuracy proxy for split-point ranking."""
+        if layer_idx is None:
+            if any(l.kind == "conv" for l in self.model.layers):
+                from repro.models.vgg import feature_index
+                layer_idx = feature_index(self.model)
+            else:
+                layer_idx = list(range(1, len(self.model.layers) - 1))
+        self._layer_idx = list(layer_idx)
+        self._cs = cumulative_saliency(self.model, self.params, self._x,
+                                       self._labels, layer_idx=self._layer_idx)
+        self._candidates = None                      # invalidate downstream
+        self._mode = None
+        return self
+
+    @property
+    def cs_curve(self) -> np.ndarray:
+        if self._cs is None:
+            self.profile()
+        return self._cs
+
+    @property
+    def layer_idx(self) -> list:
+        if self._layer_idx is None:
+            self.profile()
+        return self._layer_idx
+
+    def candidates(self, *, top_n: int = 3,
+                   include_lc_rc: bool = True) -> "Study":
+        """Stage 2: CS-ranked design points.  SC cuts are the CS local
+        maxima restricted to legal cuts (``core.split.validate_cut`` is
+        the legality authority); when the curve has no interior maxima
+        (short models), the highest-CS legal cuts stand in.  LC and RC
+        bracket the list per the paper."""
+        cs, li = self.cs_curve, self.layer_idx
+        points = candidate_split_points(self.model, cs, li, top_n=top_n)
+        if not points:
+            ranked = sorted(legal_split_candidates(self.model, cs, li),
+                            key=lambda c: -c.accuracy_proxy)
+            points = [c.split_layer for c in ranked[:top_n]]
+        cands = Q.rank_candidates(cs, li, points, include_lc_rc=include_lc_rc)
+        self._candidates = [replace(c, compression=self.compression)
+                            if c.kind == "SC" else c for c in cands]
+        self._mode = None
+        return self
+
+    @property
+    def candidate_list(self) -> list:
+        if self._candidates is None:
+            self.candidates()
+        return self._candidates
+
+    def split_candidates(self) -> list:
+        """The SC subset of :attr:`candidate_list` (helper for stages that
+        only operate on actual cuts)."""
+        return [c for c in self.candidate_list if c.kind == "SC"]
+
+    def bottlenecks(self, *, steps: int = 100, rate: Optional[float] = None,
+                    cuts: Optional[Sequence[int]] = None, lr: float = 5e-4,
+                    data_iter=None) -> "Study":
+        """Optional stage: train a bottleneck AE per SC cut (paper Eq. 3,
+        backbone frozen).  Without ``data_iter`` the study's own sample
+        batch is cycled — enough for the demo pipelines; pass a real
+        iterator for production AEs."""
+        rate = self.compression if rate is None else rate
+        cuts = [c.split_layer for c in self.split_candidates()] \
+            if cuts is None else list(cuts)
+        if data_iter is None:
+            data_iter = itertools.repeat((self._x, self._labels))
+        for cut in cuts:
+            self._ae_map[cut], _ = B.train_bottleneck(
+                self.model, self.params, cut, data_iter, steps=steps,
+                lr=lr, rate=rate, seed=self.seed)
+        self._mode = None
+        return self
+
+    def calibrate(self, *, splits: Optional[Sequence[int]] = None,
+                  iters: int = 3, quantize: bool = True) -> "Study":
+        """Optional stage: execute the real head/tail stages and wire codec
+        on this host and keep the measured
+        :class:`~repro.runtime.calibrate.CalibrationTable`.  Every later
+        ``simulate`` (single-link *and* fleet) prices flows from it,
+        falling back to the analytic model for uncovered cells."""
+        from repro.runtime.calibrate import calibrate as _calibrate
+        splits = [c.split_layer for c in self.split_candidates()] \
+            if splits is None else list(splits)
+        self._calibration = _calibrate(self.model, self.params, splits,
+                                       ae_map=self._ae_map, x=self._x,
+                                       iters=iters, quantize=quantize)
+        self._mode = None
+        return self
+
+    @property
+    def calibration(self):
+        return self._calibration
+
+    # ---------------------------------------------------------- simulate ----
+    def _netcfg(self, network) -> NetworkConfig:
+        if network is None:
+            return self.scenario.netcfg()
+        if isinstance(network, NetworkConfig):
+            return network
+        if isinstance(network, Channel):
+            return NetworkConfig(self.scenario.protocol, network)
+        raise TypeError("network must be a NetworkConfig or Channel")
+
+    def simulate(self, network=None, fleet=None, *,
+                 n_frames: Optional[int] = None,
+                 space=None, **space_overrides) -> "Study":
+        """Stage 3: communication-aware simulation of every candidate.
+
+        ``network``: a single link (``NetworkConfig`` or ``Channel``;
+        default: the study scenario's link) — produces one
+        ``SimVerdict`` per candidate.  ``fleet``: ``(trace,
+        device_classes)`` — runs the QoS deployment planner over
+        split x protocol x batch x replicas instead.  Cost source
+        (analytic vs calibrated) is selected uniformly for both paths by
+        the preceding :meth:`calibrate` call, per cell.
+        """
+        n_frames = self.scenario.n_frames if n_frames is None else n_frames
+        if fleet is not None:
+            return self._simulate_fleet(fleet, n_frames, space,
+                                        space_overrides)
+        netcfg = self._netcfg(network)
+        verdicts = []
+        measured = self._data is not None and self.cfg is None
+        for cand in self.candidate_list:
+            scen = cand.scenario(self.scenario.edge, self.scenario.server)
+            flow = measure_flow(scen, netcfg, self.model, self.params,
+                                self.input_bytes, n_frames=n_frames,
+                                cost=self._calibration, sample=self._sample)
+            if measured:
+                sim = ApplicationSimulator(
+                    self.model, self.params, netcfg,
+                    ae=self._ae_map.get(cand.split_layer),
+                    lc_model=self.lc_model, lc_params=self.lc_params)
+                v = sim.simulate(scen, np.asarray(self._x),
+                                 np.asarray(self._labels),
+                                 n_frames=n_frames, flow=flow)
+                meta = dict(v.meta, cost_source=flow["cost_source"])
+                verdicts.append(Q.SimVerdict(cand, v.latency_s, v.accuracy,
+                                             meta))
+            else:
+                verdicts.append(Q.SimVerdict(
+                    cand, flow_latency_s(flow), cand.accuracy_proxy,
+                    meta={"wire_bytes": flow["wire_bytes"],
+                          "cost_source": flow["cost_source"],
+                          "edge_s": flow["edge_s"],
+                          "server_s": flow["server_s"]}))
+        self._verdicts, self._mode = verdicts, "link"
+        self._suggested = self._plans = None
+        return self
+
+    def _proxy_accuracy_fn(self):
+        proxies = {(c.kind, c.split_layer): c.accuracy_proxy
+                   for c in self.candidate_list}
+
+        def accuracy_fn(scenario, netcfg):
+            split = getattr(scenario.split_plan, "split_layer", None)
+            acc = proxies.get((scenario.kind, split), 0.0)
+            if netcfg.protocol == "udp":             # lossy link degrades
+                acc -= netcfg.channel.loss_rate
+            return acc
+        return accuracy_fn
+
+    def _simulate_fleet(self, fleet, n_frames, space, overrides) -> "Study":
+        from repro.fleet.planner import DeploymentPlanner, SearchSpace
+        trace, devices = fleet
+        measured = self._data is not None and self.cfg is None
+        self._planner = DeploymentPlanner(
+            self.model, self.params, cs_curve=self.cs_curve,
+            layer_idx=self.layer_idx, ae_map=self._ae_map,
+            eval_data=((np.asarray(self._x), np.asarray(self._labels))
+                       if measured else None),
+            accuracy_fn=None if measured else self._proxy_accuracy_fn(),
+            lc_model=self.lc_model, lc_params=self.lc_params,
+            server_platform=self.scenario.server,
+            input_bytes=self.input_bytes, n_frames=n_frames,
+            cost=self._calibration, sample=self._sample)
+        if space is None:
+            sps = tuple(c.split_layer for c in self.split_candidates())
+            kw = dict(split_points=sps,
+                      include_lc=self.lc_model is not None)
+            kw.update(overrides)
+            space = SearchSpace(**kw)
+        self._fleet, self._space = (trace, devices), space
+        self._points = self._planner.search(trace, devices, space)
+        self._mode = "fleet"
+        self._suggested = self._plans = None
+        return self
+
+    @property
+    def verdicts(self) -> list:
+        if self._mode == "fleet":
+            # don't silently throw away an expensive fleet search —
+            # single-link verdicts would reset the fleet plans
+            raise RuntimeError(
+                "study is in fleet mode (plan_points / suggest(qos) hold "
+                "the results); call simulate() explicitly for single-link "
+                "verdicts")
+        if self._mode != "link":
+            self.simulate()
+        return self._verdicts
+
+    @property
+    def plan_points(self) -> list:
+        if self._mode != "fleet":
+            raise RuntimeError("plan_points needs simulate(fleet=...) first")
+        return self._points
+
+    @property
+    def planner(self):
+        """The underlying ``DeploymentPlanner`` of the last fleet
+        simulation (for joint validation via
+        ``fleet.planner.simulate_deployment``)."""
+        if self._planner is None:
+            raise RuntimeError("planner needs simulate(fleet=...) first")
+        return self._planner
+
+    # ------------------------------------------------------------ output ----
+    def pareto(self) -> list:
+        """The non-dominated set of the last simulation — accuracy/latency
+        for a single link, (p99, accuracy, server FLOPs/s) per device
+        class for a fleet."""
+        if self._mode == "fleet":
+            return self._planner.pareto_front(self._points)
+        return Q.pareto(self.verdicts)
+
+    def suggest(self, qos):
+        """Stage 4: the best design meeting ``qos``
+        (:class:`~repro.core.qos.QoSRequirements`).  Single-link mode
+        returns a ``SimVerdict`` (or None); fleet mode returns
+        ``{device_name: PlanPoint | None}``.  Runs any missing stage with
+        defaults first."""
+        if self._mode == "fleet":
+            self._plans = self._planner.suggest(qos, self._fleet,
+                                                points=self._points)
+            return self._plans
+        best = Q.suggest(self.verdicts, qos)
+        self._suggested = best
+        return best
+
+    def _chosen_candidate(self, candidate, device) -> tuple:
+        """(candidate, wire protocol) the deployment should execute."""
+        if candidate is not None:
+            return (SplitCandidate.from_any(candidate).validate(self.model),
+                    self.scenario.protocol)
+        if self._plans is not None:          # fleet suggestion
+            plans = {d: p for d, p in self._plans.items() if p is not None}
+            if device is None and len(plans) == 1:
+                device = next(iter(plans))
+            if device not in plans:
+                raise ValueError(f"no feasible plan for device {device!r}; "
+                                 f"feasible: {sorted(plans)}")
+            p = plans[device]
+            return (SplitCandidate.from_any((p.label, p.split_layer)),
+                    p.protocol or self.scenario.protocol)
+        if self._suggested is None:
+            raise RuntimeError("deploy() after suggest(qos), or pass "
+                               "candidate=")
+        return (SplitCandidate.from_any(self._suggested.candidate),
+                self.scenario.protocol)
+
+    def deploy(self, candidate=None, *, device=None, serve: bool = False,
+               n_slots: int = 4, quantize: bool = True, backend=None):
+        """Stage 5: a ready runtime for the chosen cut.
+
+        Returns a :class:`~repro.runtime.engine.SplitRuntime` executing
+        the suggested SC cut live (head -> int8 wire -> tail, the study
+        scenario's channel pricing the hop), or — with ``serve=True`` —
+        a :class:`~repro.runtime.engine.TailServer` batching many
+        clients' tail requests.  ``candidate`` overrides the suggestion;
+        ``device`` picks a fleet plan.  RC/LC designs have no cut to
+        execute and raise with guidance.
+        """
+        cand, protocol = self._chosen_candidate(candidate, device)
+        if cand.kind != "SC":
+            raise ValueError(
+                f"suggested design is {cand.label}: nothing to split — run "
+                f"the whole model on the "
+                f"{'server' if cand.kind == 'RC' else 'edge'} instead "
+                f"(deploy() builds split runtimes; pass candidate='SC@<k>' "
+                f"to force a cut)")
+        split = cand.split_layer
+        if serve:
+            from repro.runtime.engine import TailServer
+            from repro.runtime.partition import make_partition
+            part = make_partition(self.model, self.params, split,
+                                  self._ae_map.get(split))
+            return TailServer(part, n_slots=n_slots)
+        from repro.runtime.engine import SplitRuntime
+        return SplitRuntime(self.model, self.params, split,
+                            ae=self._ae_map.get(split),
+                            channel=self.scenario.channel,
+                            protocol=protocol,
+                            quantize=quantize, backend=backend)

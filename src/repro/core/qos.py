@@ -12,18 +12,20 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Optional, Sequence
 
+from repro.api.types import SplitCandidate
+
+# Deprecated alias: the candidate type now lives in ``repro.api.types``
+# (one design-point type from profiling to deployment).  Constructor and
+# field names are unchanged — ``Candidate(label, split_layer,
+# accuracy_proxy)`` keeps working — but new code should import
+# ``SplitCandidate`` from ``repro.api``.
+Candidate = SplitCandidate
+
 
 @dataclass(frozen=True)
 class QoSRequirements:
     max_latency_s: float            # e.g. 0.05 (20 FPS conveyor belt, §V-B)
     min_accuracy: float = 0.0
-
-
-@dataclass
-class Candidate:
-    label: str                      # 'LC' | 'RC' | 'SC@<layer>'
-    split_layer: Optional[int] = None
-    accuracy_proxy: float = 0.0     # CS value at the cut (ranking key)
 
 
 @dataclass
@@ -40,7 +42,7 @@ class SimVerdict:
 
 def rank_candidates(cs_curve, layer_idx: Sequence[int],
                     split_points: Sequence[int],
-                    include_lc_rc: bool = True) -> list:
+                    include_lc_rc: bool = True) -> list[SplitCandidate]:
     """Output i: candidates ordered by presumed accuracy (CS at the cut)."""
     pos = {sp: i for i, sp in enumerate(layer_idx)}
     missing = [sp for sp in split_points if sp not in pos]
@@ -48,13 +50,13 @@ def rank_candidates(cs_curve, layer_idx: Sequence[int],
         raise ValueError(
             f"split points {missing} have no CS value: not in layer_idx "
             f"{sorted(pos)} — pass the layer_idx the curve was computed over")
-    cands = [Candidate(f"SC@{sp}", sp, float(cs_curve[pos[sp]]))
+    cands = [SplitCandidate.sc(sp, float(cs_curve[pos[sp]]))
              for sp in split_points]
     cands.sort(key=lambda c: -c.accuracy_proxy)
     if include_lc_rc:
         # RC preserves full accuracy (proxy 1.0 by definition); LC runs the
         # lightweight local model (proxy below any SC cut).
-        cands = [Candidate("RC", None, 1.0)] + cands + [Candidate("LC", None, 0.0)]
+        cands = [SplitCandidate.rc()] + cands + [SplitCandidate.lc()]
     return cands
 
 

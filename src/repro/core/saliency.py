@@ -107,7 +107,7 @@ def batched_cs(model: LayeredModel, params, data_iter, n_batches: int,
     return acc / n_batches
 
 
-def local_maxima(curve: np.ndarray, *, tol: float = 1e-9) -> list:
+def local_maxima(curve: np.ndarray, *, tol: float = 1e-9) -> list[int]:
     """Plateau-tolerant local maxima indices (endpoints excluded)."""
     peaks = []
     n = len(curve)
@@ -125,7 +125,8 @@ def local_maxima(curve: np.ndarray, *, tol: float = 1e-9) -> list:
 
 
 def candidate_split_points(model: LayeredModel, cs: np.ndarray,
-                           layer_idx: Sequence[int], top_n: int = 5) -> list:
+                           layer_idx: Sequence[int],
+                           top_n: int = 5) -> list[int]:
     """Local CS maxima mapped back to legal model cut points, best first."""
     legal = set(model.cut_points())
     peaks = [layer_idx[p] for p in local_maxima(cs) if layer_idx[p] in legal]

@@ -98,9 +98,19 @@ class Scenario:
 
 
 def scenario_times_and_payload(scenario: Scenario, model, params,
-                               input_bytes: int, batch: int = 1) -> dict:
-    """(edge_time, server_time, wire_bytes) for one inference frame."""
-    total_flops = S.total_flops(model, params, batch)
+                               input_bytes: int, batch: int = 1, *,
+                               sample=None) -> dict:
+    """(edge_time, server_time, wire_bytes) for one inference frame.
+
+    ``sample``: example input (array or pytree) for models whose
+    ``input_shape`` alone cannot describe the input.  FLOPs are counted
+    at the sample's own leading dim and rescaled linearly to ``batch``.
+    """
+    scale = 1.0
+    if sample is not None:
+        import jax
+        scale = batch / int(jax.tree.leaves(sample)[0].shape[0])
+    total_flops = S.total_flops(model, params, batch, sample=sample) * scale
     if scenario.kind == "LC":
         return {"edge_s": scenario.edge.compute_time(total_flops),
                 "server_s": 0.0, "wire_bytes": 0}
@@ -109,8 +119,10 @@ def scenario_times_and_payload(scenario: Scenario, model, params,
                 "server_s": scenario.server.compute_time(total_flops),
                 "wire_bytes": input_bytes}
     plan = scenario.split_plan
-    head_f, tail_f = S.flops_split(model, params, plan.split_layer, batch)
-    wire = wire_payload_bytes(model, params, plan, batch)
+    head_f, tail_f = S.flops_split(model, params, plan.split_layer, batch,
+                                   sample=sample)
+    head_f, tail_f = head_f * scale, tail_f * scale
+    wire = wire_payload_bytes(model, params, plan, batch, sample=sample)
     return {"edge_s": scenario.edge.compute_time(head_f),
             "server_s": scenario.server.compute_time(tail_f),
             "wire_bytes": wire}

@@ -35,18 +35,26 @@ else:  # jax <= 0.4.x keeps it in experimental, with check_rep
 
 @dataclass(frozen=True)
 class SplitPlan:
-    """A concrete SC design point."""
+    """A concrete SC design point.
+
+    The portable form of an SC candidate (``repro.api.types.SplitCandidate``
+    carries one of these as its executable payload via ``.plan()``).
+    """
     split_layer: int              # cut after this layer index
     compression: float = 0.5      # bottleneck rate (paper: 50%)
     wire_dtype_bytes: int = 4
 
     def describe(self, model: LayeredModel) -> str:
+        """Human-readable head/bottleneck/tail layout of this plan on
+        ``model`` (legality-checked through :func:`validate_cut`)."""
+        validate_cut(model, self.split_layer)
         return (f"head=[0..{self.split_layer}] "
                 f"bottleneck(rate={self.compression}) "
                 f"tail=[{self.split_layer + 1}..{len(model.layers) - 1}]")
 
 
-def legal_cuts(model: LayeredModel) -> list:
+def legal_cuts(model: LayeredModel) -> list[int]:
+    """All legal cut indices of ``model`` (ascending layer order)."""
     return model.cut_points()
 
 
@@ -67,8 +75,14 @@ def validate_cut(model: LayeredModel, split_layer: int) -> int:
 
 
 def wire_payload_bytes(model: LayeredModel, params, plan: SplitPlan,
-                       batch: int = 1) -> int:
-    shapes = model.activation_shapes(params, batch)
+                       batch: int = 1, *, sample=None) -> int:
+    """Bytes crossing the wire per ``batch`` frames under ``plan``.
+
+    ``sample``: example input (array or pytree) for models whose
+    ``input_shape`` alone cannot describe the input — see
+    ``LayeredModel.activation_shapes``.
+    """
+    shapes = model.activation_shapes(params, batch, sample=sample)
     feat = shapes[plan.split_layer][1:]
     return batch * B.payload_bytes(feat, plan.compression, plan.wire_dtype_bytes)
 

@@ -24,27 +24,36 @@ class LayerRow:
     mult_adds: int
 
 
-def _layer_mult_adds(kind: str, p, in_shape, out_shape) -> int:
-    if kind == "conv":
+def _layer_mult_adds(layer, p, in_shape, out_shape) -> int:
+    if layer.mult_adds is not None:      # layer-provided counter wins
+        return int(layer.mult_adds(p, in_shape, out_shape))
+    if layer.kind == "conv":
         kh, kw, cin, cout = p["w"].shape
         b, h, w, _ = out_shape
         return b * h * w * kh * kw * cin * cout
-    if kind == "linear":
+    if layer.kind == "linear":
         fin, fout = p["w"].shape
         return int(np.prod(out_shape[:-1])) * fin * fout
     return 0
 
 
-def summary(model: LayeredModel, params, batch: int = 16) -> list:
-    """Table I: one row per layer."""
-    x = jax.ShapeDtypeStruct((batch,) + tuple(model.input_shape), jnp.float32)
+def summary(model: LayeredModel, params, batch: int = 16, *,
+            sample=None) -> list:
+    """Table I: one row per layer.
+
+    ``sample``: example input (array or pytree) for models whose
+    ``input_shape`` alone cannot describe the input (transformer layered
+    views consume a batch dict); its leading dim wins over ``batch``.
+    """
+    x = sample if sample is not None else jax.ShapeDtypeStruct(
+        (batch,) + tuple(model.input_shape), jnp.float32)
     _, acts = jax.eval_shape(model.apply_capture, params, x)
     rows = []
-    in_shape = x.shape
+    in_shape = None if sample is not None else x.shape
     for l, p, a in zip(model.layers, params, acts):
         n = sum(int(np.prod(leaf.shape)) for leaf in jax.tree.leaves(p))
         rows.append(LayerRow(l.name, l.kind, tuple(a.shape), n,
-                             _layer_mult_adds(l.kind, p, in_shape, a.shape)))
+                             _layer_mult_adds(l, p, in_shape, a.shape)))
         in_shape = a.shape
     return rows
 
@@ -70,17 +79,19 @@ def totals(model: LayeredModel, params, batch: int = 16,
     }
 
 
-def total_flops(model: LayeredModel, params, batch: int = 1) -> float:
+def total_flops(model: LayeredModel, params, batch: int = 1, *,
+                sample=None) -> float:
     """Whole-model forward FLOPs (2x mult-adds) — the single counting
     convention shared by the scenario timing model and the serving cost
     model."""
-    return sum(r.mult_adds for r in summary(model, params, batch)) * 2
+    return sum(r.mult_adds
+               for r in summary(model, params, batch, sample=sample)) * 2
 
 
 def flops_split(model: LayeredModel, params, split_layer: int,
-                batch: int = 1) -> tuple:
+                batch: int = 1, *, sample=None) -> tuple:
     """(head_flops, tail_flops) for a cut after ``split_layer`` (2x mult-adds)."""
-    rows = summary(model, params, batch)
+    rows = summary(model, params, batch, sample=sample)
     head = sum(r.mult_adds for r in rows[:split_layer + 1]) * 2
     tail = sum(r.mult_adds for r in rows[split_layer + 1:]) * 2
     return head, tail

@@ -20,9 +20,9 @@ from typing import Optional, Sequence
 
 import numpy as np
 
+from repro.api.types import SplitCandidate, legal_split_candidates
 from repro.core.qos import QoSRequirements, pareto_nd, rank_candidates
 from repro.core.scenarios import PLATFORMS, Scenario
-from repro.core.split import SplitPlan
 from repro.fleet.cluster import ClusterConfig, ClusterSim
 from repro.fleet.traffic import DeviceClass, Trace
 from repro.netsim.simulator import (ApplicationSimulator, NetworkConfig,
@@ -76,6 +76,14 @@ class DeploymentPlanner:
     overrides the measured-accuracy path (tests / analytic proxies);
     without it, accuracy comes from ``ApplicationSimulator`` on
     ``eval_data`` — real forwards on loss-corrupted tensors.
+
+    ``cost``: any :class:`repro.api.types.CostModel` pricing both the
+    per-flow stage times and the server's batched service time; cells it
+    can't price fall back to the analytic FLOPs model.
+    ``cost_source``/``calibration`` are the pre-``repro.api`` spelling of
+    the same choice, kept as a deprecation shim (``cost=table`` is the
+    one-argument replacement for ``cost_source="measured",
+    calibration=table``).
     """
 
     def __init__(self, model, params, *, cs_curve, layer_idx,
@@ -83,7 +91,8 @@ class DeploymentPlanner:
                  lc_model=None, lc_params=None,
                  server_platform=PLATFORMS["server-gpu"],
                  input_bytes: Optional[int] = None, n_frames: int = 8,
-                 cost_source: str = "analytic", calibration=None):
+                 cost=None, cost_source: str = "analytic", calibration=None,
+                 sample=None):
         if accuracy_fn is None and eval_data is None:
             raise ValueError("need eval_data to measure accuracy "
                              "(or pass accuracy_fn)")
@@ -99,6 +108,10 @@ class DeploymentPlanner:
         if cost_source == "analytic" and calibration is not None:
             raise ValueError("calibration given but cost_source='analytic' "
                              "would ignore it; pass cost_source='measured'")
+        if cost is not None and calibration is not None:
+            raise ValueError("pass either cost= (the repro.api spelling) or "
+                             "the deprecated cost_source=/calibration= pair, "
+                             "not both")
         self.model, self.params = model, params
         self.cs_curve, self.layer_idx = cs_curve, list(layer_idx)
         self.ae_map = dict(ae_map or {})
@@ -113,28 +126,40 @@ class DeploymentPlanner:
         self.n_frames = n_frames
         self.cost_source = cost_source
         self.calibration = calibration
+        if cost is not None:
+            self.cost = cost
+        elif calibration is not None:
+            # deprecated spelling: wrap so pre-CostModel tables (2-arg
+            # flow_times, lookup()) keep working
+            from repro.netsim.simulator import _LegacyCalibration
+            self.cost = _LegacyCalibration(calibration)
+        else:
+            self.cost = None
+        # example input pytree for models whose input_shape cannot
+        # describe the input (transformer layered views)
+        self.sample = sample
         self._flow_cache = {}
         self._cost_cache = {}
 
     # ------------------------------------------------------- candidates ----
-    def candidates(self, space: SearchSpace) -> list:
-        """(label, split_layer) list: CS-ranked SC cuts (pruned to top-k)
-        plus RC/LC per the space flags — core.qos ranking reused as-is."""
+    def candidates(self, space: SearchSpace) -> list[SplitCandidate]:
+        """CS-ranked SC cuts (pruned to top-k) plus RC/LC per the space
+        flags — core.qos ranking reused as-is.  Elements are
+        :class:`repro.api.types.SplitCandidate`\\ s (tuple-compatible with
+        the historical ``(label, split_layer)`` shape)."""
         ranked = rank_candidates(self.cs_curve, self.layer_idx,
                                  space.split_points, include_lc_rc=False)
-        out = [(c.label, c.split_layer) for c in ranked[:space.top_k_splits]]
+        out = list(ranked[:space.top_k_splits])
         if space.include_rc:
-            out.append(("RC", None))
+            out.append(SplitCandidate.rc())
         if space.include_lc and self.lc_model is not None:
-            out.append(("LC", None))
+            out.append(SplitCandidate.lc())
         return out
 
     def _scenario(self, device: DeviceClass, label: str,
                   split: Optional[int]) -> Scenario:
-        kind = label.split("@")[0]
-        plan = SplitPlan(split) if kind == "SC" else None
-        return Scenario(kind, plan, edge=device.platform,
-                        server=self.server_platform)
+        cand = SplitCandidate.from_any((label, split))
+        return cand.scenario(device.platform, self.server_platform)
 
     # ------------------------------------------------------ per-flow leg ----
     def _flow(self, device: DeviceClass, label: str, split: Optional[int],
@@ -149,7 +174,7 @@ class DeploymentPlanner:
         netcfg = NetworkConfig(protocol, device.channel)
         flow = measure_flow(scenario, netcfg, self.model, self.params,
                             self.input_bytes, n_frames=self.n_frames,
-                            calibration=self.calibration)
+                            cost=self.cost, sample=self.sample)
         if self.accuracy_fn is not None:
             acc = float(self.accuracy_fn(scenario, netcfg))
         else:
@@ -167,27 +192,24 @@ class DeploymentPlanner:
     def _cost_model(self, split: Optional[int]) -> BatchCostModel:
         if split not in self._cost_cache:
             cost = None
-            if self.calibration is not None:
-                kind = "SC" if split is not None else "RC"
-                entry = self.calibration.lookup(kind, split)
-                if entry is not None:
-                    # server-side wall clock of the executed tail stage,
-                    # normalised to one request (table is per cal-batch)
-                    per_item = entry.server_s / max(
-                        1, getattr(self.calibration, "batch", 1))
-                    cost = BatchCostModel.from_measured(
-                        per_item, self.server_platform.flops_per_s)
+            if self.cost is not None and hasattr(self.cost, "server_cost"):
+                # measured (or otherwise externally priced) server stage
+                cost = self.cost.server_cost(split, self.server_platform)
             if cost is None:
                 cost = BatchCostModel.for_split(
-                    self.model, self.params, split, self.server_platform)
+                    self.model, self.params, split, self.server_platform,
+                    sample=self.sample)
             self._cost_cache[split] = cost
         return self._cost_cache[split]
 
     def default_space(self) -> SearchSpace:
         """Every legal cut the CS curve covers, stock protocol/batch/replica
-        grids — what ``suggest`` uses when no space is given."""
-        legal = set(self.model.cut_points())
-        sps = tuple(sp for sp in self.layer_idx if sp in legal)
+        grids — what ``suggest`` uses when no space is given.  Legality
+        comes from ``api.types.legal_split_candidates`` (which routes
+        through ``core.split.validate_cut``, the single authority)."""
+        covered = {c.split_layer for c in legal_split_candidates(
+            self.model, self.cs_curve, self.layer_idx)}
+        sps = tuple(sp for sp in self.layer_idx if sp in covered)
         return SearchSpace(split_points=sps,
                            include_lc=self.lc_model is not None)
 

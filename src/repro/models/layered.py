@@ -15,15 +15,20 @@ from typing import Any, Callable, List
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 @dataclass
 class Layer:
     name: str
-    kind: str                       # 'conv' | 'relu' | 'pool' | 'linear' | 'flatten' | 'block' | ...
+    kind: str                       # 'conv' | 'relu' | 'pool' | 'linear' | ...
     init: Callable[[Any], Any]      # key -> params (possibly {})
     apply: Callable[[Any, jax.Array], jax.Array]
     splittable: bool = True         # is a cut *after* this layer legal?
+    # optional mult-add counter ``(params, in_shape, out_shape) -> int`` for
+    # layers whose cost the generic conv/linear rules in ``core.stats``
+    # cannot see (transformer blocks close over their params)
+    mult_adds: Callable[[Any, tuple, tuple], int] = None
 
 
 @dataclass
@@ -66,12 +71,21 @@ class LayeredModel:
             x = l.apply(p, x)
         return x
 
-    def cut_points(self) -> list:
+    def cut_points(self) -> list[int]:
         """Indices i such that a cut after layer i is legal."""
         return [i for i, l in enumerate(self.layers) if l.splittable and i < len(self.layers) - 1]
 
-    def activation_shapes(self, params: list, batch: int = 1) -> list:
-        x = jax.ShapeDtypeStruct((batch,) + tuple(self.input_shape), jnp.float32)
+    def activation_shapes(self, params: list, batch: int = 1, *,
+                          sample=None) -> list[tuple]:
+        """Per-layer output shapes (leading ``batch`` dim included).
+
+        ``sample``: an example input (array or pytree, e.g. a transformer
+        batch dict) to derive shapes from when ``input_shape`` alone
+        cannot describe the input; its own leading dim wins over
+        ``batch``.
+        """
+        x = sample if sample is not None else jax.ShapeDtypeStruct(
+            (batch,) + tuple(self.input_shape), jnp.float32)
         _, acts = jax.eval_shape(self.apply_capture, params, x)
         return [a.shape for a in acts]
 
@@ -92,10 +106,15 @@ def transformer_as_layered(cfg, params) -> LayeredModel:
         name="embed", kind="embed",
         init=lambda k: {},
         apply=lambda p, batch: T.embed_inputs(params, cfg, batch)[0],
-        splittable=True)]
+        splittable=True,
+        mult_adds=lambda p, ish, osh: 0)]     # table lookup, no matmul
 
     def make_block(g, j, desc):
         lp = jax.tree.map(lambda a: a[g], params["layers"][f"l{j}"])
+        # matmul cost per token ~ the block's weight count (x @ W costs
+        # prod(W.shape) mult-adds per token for every 2-D weight)
+        w_elems = sum(int(np.prod(a.shape)) for a in jax.tree.leaves(lp)
+                      if getattr(a, "ndim", 0) >= 2)
 
         def apply(p, x):
             positions = jnp.arange(x.shape[1])
@@ -103,7 +122,8 @@ def transformer_as_layered(cfg, params) -> LayeredModel:
                                         causal=True, window=cfg.sliding_window)
             return y
         return Layer(name=f"block{g * len(descs) + j}", kind="block",
-                     init=lambda k: {}, apply=apply, splittable=True)
+                     init=lambda k: {}, apply=apply, splittable=True,
+                     mult_adds=lambda p, ish, osh: w_elems * osh[0] * osh[1])
 
     for g in range(n_groups):
         for j, desc in enumerate(descs):
@@ -114,7 +134,9 @@ def transformer_as_layered(cfg, params) -> LayeredModel:
         return T.logits_from_x(params, cfg, x)
 
     layers.append(Layer(name="head", kind="head", init=lambda k: {},
-                        apply=head_apply, splittable=False))
+                        apply=head_apply, splittable=False,
+                        mult_adds=lambda p, ish, osh:
+                            cfg.d_model * int(np.prod(osh[:-1])) * osh[-1]))
     return LayeredModel(name=cfg.name, layers=layers,
                         input_shape=(), n_classes=cfg.vocab)
 

@@ -147,7 +147,8 @@ def _flash_chunked(q, k, v, *, causal, window, q_chunk, kv_chunk, scale):
         init = (jnp.full((b, h, q_chunk), NEG_INF, jnp.float32),
                 jnp.zeros((b, h, q_chunk), jnp.float32),
                 jnp.zeros((b, h, q_chunk, d), jnp.float32))
-        (m, l, acc), _ = jax.lax.scan(kv_step, init, (jnp.arange(nk), kc.swapaxes(0, 1), vc.swapaxes(0, 1)))
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, init, (jnp.arange(nk), kc.swapaxes(0, 1), vc.swapaxes(0, 1)))
         out = acc / jnp.maximum(l, 1e-30)[..., None]
         return out.swapaxes(1, 2).astype(q.dtype)  # (B,q_chunk,H,D)
 

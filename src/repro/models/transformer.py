@@ -333,7 +333,9 @@ def init_cache(cfg: ModelConfig, batch: int, seq_len: int, dtype=None) -> dict:
             nh = cfg.d_model // cfg.rwkv_head_dim
             c["tm_prev"] = jnp.zeros((n_groups, batch, cfg.d_model), jnp.float32)
             c["cm_prev"] = jnp.zeros((n_groups, batch, cfg.d_model), jnp.float32)
-            c["wkv"] = jnp.zeros((n_groups, batch, nh, cfg.rwkv_head_dim, cfg.rwkv_head_dim), jnp.float32)
+            c["wkv"] = jnp.zeros(
+                (n_groups, batch, nh, cfg.rwkv_head_dim, cfg.rwkv_head_dim),
+                jnp.float32)
         if desc.cross:
             c["ck"] = jnp.zeros((n_groups, batch, cfg.n_frames, cfg.n_heads, hd), dt)
             c["cv"] = jnp.zeros((n_groups, batch, cfg.n_frames, cfg.n_heads, hd), dt)
@@ -371,7 +373,8 @@ def apply_layer_decode(p, desc: LayerDesc, x, cfg, cache_l, pos, window):
         att, upd = _attn_decode(p["attn"], h, cfg, cache_l, pos, window)
         cache_new.update(upd)
     elif desc.mixer == "mamba":
-        att, (conv, ssm) = mamba_mod.mamba_step(p["mamba"], h, (cache_l["conv"], cache_l["ssm"]), cfg)
+        att, (conv, ssm) = mamba_mod.mamba_step(
+            p["mamba"], h, (cache_l["conv"], cache_l["ssm"]), cfg)
         cache_new["conv"], cache_new["ssm"] = conv, ssm
     else:
         att, tm_prev, wkv = rwkv_mod.time_mix(

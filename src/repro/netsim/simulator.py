@@ -11,6 +11,7 @@ real, not modelled.
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass
 
 import jax
@@ -31,9 +32,44 @@ class NetworkConfig:
     mtu: int = MTU_BYTES
 
 
+class _LegacyCalibration:
+    """Adapter for the deprecated ``calibration=`` argument: the old
+    contract was "any object with ``flow_times(kind, split)``" (no
+    ``batch`` parameter — the caller rescaled).  This keeps such objects
+    working through the ``CostModel`` interface."""
+
+    def __init__(self, table):
+        self._table = table
+        self.batch = getattr(table, "batch", 0)
+
+    def flow_times(self, kind, split=None, batch=None):
+        times = self._table.flow_times(kind, split)
+        if times is not None and batch:
+            from repro.api.types import scale_flow_times
+            times = scale_flow_times(times, self.batch or batch, batch)
+        return times
+
+    def server_cost(self, split, platform):
+        fn = getattr(self._table, "server_cost", None)
+        if fn is not None:
+            return fn(split, platform)
+        # pre-CostModel planner contract: a ``lookup(kind, split)`` whose
+        # entry carries the measured per-cal-batch server wall clock
+        lookup = getattr(self._table, "lookup", None)
+        if lookup is None:
+            return None
+        entry = lookup("SC" if split is not None else "RC", split)
+        if entry is None:
+            return None
+        from repro.serving.engine import BatchCostModel
+        per_item = entry.server_s / max(1, self.batch or 1)
+        return BatchCostModel.from_measured(per_item, platform.flops_per_s)
+
+
 def measure_flow(scenario: Scenario, netcfg: NetworkConfig, model, params,
                  input_bytes: int, n_frames: int = 8, *,
-                 calibration=None, batch: int = 1) -> dict:
+                 cost=None, calibration=None, batch: int = 1,
+                 sample=None) -> dict:
     """Per-flow latency decomposition of one scenario over one network.
 
     Returns ``edge_s``/``server_s`` compute times, the wire payload, and
@@ -42,30 +78,36 @@ def measure_flow(scenario: Scenario, netcfg: NetworkConfig, model, params,
     ``repro.fleet.planner`` consumes it to cost whole deployments without
     re-deriving the timing model.
 
-    ``calibration``: a ``repro.runtime.calibrate.CalibrationTable`` (or any
-    object with the same ``flow_times(kind, split)``).  When it covers this
-    scenario's cell, compute times and the wire payload come from the
-    *measured* split-runtime execution instead of the analytic
-    FLOPs/throughput model — the returned dict's ``cost_source`` says
-    which path produced it.  Tables calibrated at a different batch size
-    are rescaled linearly to ``batch`` (first-order model; re-calibrate at
-    the serving batch for exact numbers).
+    ``cost``: any :class:`repro.api.types.CostModel` — a
+    ``runtime.calibrate.CalibrationTable`` (measured), an
+    ``api.types.AnalyticCost``, or a ``CostStack`` of both.  When it
+    prices this scenario's cell, compute times and the wire payload come
+    from it (the returned dict's ``cost_source`` says which path produced
+    them); cells it can't price fall back to the built-in analytic
+    FLOPs/throughput model.  Cost sources quoted at a different batch
+    size rescale linearly to ``batch`` (first-order model; re-calibrate
+    at the serving batch for exact numbers).
+
+    ``calibration``: deprecated alias of ``cost`` (pre-``repro.api``
+    signature), kept as a shim.
+
+    ``sample``: example input pytree forwarded to the analytic fallback
+    for models whose ``input_shape`` cannot describe the input.
     """
-    times = None
     if calibration is not None:
+        warnings.warn("measure_flow(calibration=...) is deprecated; pass "
+                      "cost=... (any repro.api.types.CostModel)",
+                      DeprecationWarning, stacklevel=2)
+        if cost is None:
+            cost = _LegacyCalibration(calibration)
+    times = None
+    if cost is not None:
         split = getattr(scenario.split_plan, "split_layer", None)
-        times = calibration.flow_times(scenario.kind, split)
-        cal_batch = getattr(calibration, "batch", batch) or batch
-        if times is not None and cal_batch != batch:
-            scale = batch / cal_batch
-            times = {**times,
-                     "edge_s": times["edge_s"] * scale,
-                     "server_s": times["server_s"] * scale,
-                     "wire_bytes": int(round(times["wire_bytes"] * scale))}
+        times = cost.flow_times(scenario.kind, split, batch=batch)
     if times is None:
         times = dict(scenario_times_and_payload(scenario, model, params,
                                                 input_bytes=input_bytes,
-                                                batch=batch),
+                                                batch=batch, sample=sample),
                      cost_source="analytic")
     frames = []
     if times["wire_bytes"] > 0:

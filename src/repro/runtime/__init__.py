@@ -1,9 +1,9 @@
 """Live split-execution runtime: partition -> wire -> tail, measured.
 
 The executable counterpart of the ``netsim``/``fleet`` simulators — and
-the instrument that calibrates them (``runtime.calibrate`` feeds
-``measure_flow``/``DeploymentPlanner`` their ``cost_source="measured"``
-path).
+the instrument that calibrates them: ``runtime.calibrate`` builds the
+measured ``CalibrationTable`` that ``measure_flow``/``DeploymentPlanner``
+(and the ``repro.api.Study`` facade) consume via ``cost=``.
 """
 from .calibrate import CalEntry, CalibrationTable, calibrate       # noqa: F401
 from .engine import (RuntimeResult, SplitRuntime, TailServer,      # noqa: F401

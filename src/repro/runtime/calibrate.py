@@ -7,10 +7,11 @@ executing the real head/tail stages and the real wire codec on the
 attached hardware — the paper §IV hardware-in-the-loop methodology (see
 ``core.scenarios.HILPlatform``), extended to a whole grid of cuts.
 
-``netsim.simulator.measure_flow(..., calibration=table)`` and
-``fleet.planner.DeploymentPlanner(cost_source="measured",
-calibration=table)`` look entries up by ``(scenario kind, split layer)``
-and fall back to the analytic model for cells the grid didn't cover.
+The table implements the :class:`repro.api.types.CostModel` protocol:
+``netsim.simulator.measure_flow(..., cost=table)`` and
+``fleet.planner.DeploymentPlanner(cost=table)`` look entries up by
+``(scenario kind, split layer)`` and fall back to the analytic model for
+cells the grid didn't cover.
 """
 from __future__ import annotations
 
@@ -18,6 +19,7 @@ import json
 from dataclasses import asdict, dataclass, field
 from typing import Optional, Sequence
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -69,22 +71,46 @@ class CalibrationTable:
     def lookup(self, kind: str, split: Optional[int] = None) -> Optional[CalEntry]:
         return self.entries.get(self.key(kind, split))
 
-    def flow_times(self, kind: str, split: Optional[int] = None) -> Optional[dict]:
+    def flow_times(self, kind: str, split: Optional[int] = None,
+                   batch: Optional[int] = None) -> Optional[dict]:
         """The measured replacement for
         ``core.scenarios.scenario_times_and_payload`` — same keys, plus the
         provenance marker.  None when the cell wasn't calibrated.
+
+        With ``batch``, times quoted at the table's calibration batch are
+        rescaled linearly to ``batch`` frames (first-order model;
+        re-calibrate at the serving batch for exact numbers).  This is
+        the :class:`repro.api.types.CostModel` flow interface.
         """
         e = self.lookup(kind, split)
         if e is None:
             return None
         if kind == "LC":
-            return {"edge_s": e.head_s, "server_s": 0.0, "wire_bytes": 0,
-                    "cost_source": "measured"}
-        if kind == "RC":
-            return {"edge_s": 0.0, "server_s": e.tail_s,
-                    "wire_bytes": e.wire_bytes, "cost_source": "measured"}
-        return {"edge_s": e.edge_s, "server_s": e.server_s,
-                "wire_bytes": e.wire_bytes, "cost_source": "measured"}
+            times = {"edge_s": e.head_s, "server_s": 0.0, "wire_bytes": 0,
+                     "cost_source": "measured"}
+        elif kind == "RC":
+            times = {"edge_s": 0.0, "server_s": e.tail_s,
+                     "wire_bytes": e.wire_bytes, "cost_source": "measured"}
+        else:
+            times = {"edge_s": e.edge_s, "server_s": e.server_s,
+                     "wire_bytes": e.wire_bytes, "cost_source": "measured"}
+        if batch is not None:
+            from repro.api.types import scale_flow_times
+            times = scale_flow_times(times, self.batch or batch, batch)
+        return times
+
+    def server_cost(self, split: Optional[int], platform):
+        """Measured per-replica service-time model of the server stage
+        (the :class:`repro.api.types.CostModel` server interface): the
+        wall clock of the executed tail stage, normalised to one request.
+        None when the cell wasn't calibrated.
+        """
+        from repro.serving.engine import BatchCostModel
+        entry = self.lookup("SC" if split is not None else "RC", split)
+        if entry is None:
+            return None
+        per_item = entry.server_s / max(1, self.batch)
+        return BatchCostModel.from_measured(per_item, platform.flops_per_s)
 
     def splits(self) -> list:
         return sorted(int(k.split("@")[1]) for k in self.entries
@@ -119,14 +145,19 @@ def calibrate(model, params, splits: Sequence[int], *,
     and server — scale or re-measure per platform for heterogeneous
     deployments).  ``ae_map``: split -> trained bottleneck AE; splits
     without an entry ship the raw int8 activation.
+
+    ``x`` may be any input pytree the model consumes (a transformer
+    layered view takes a batch dict); the calibration batch is its
+    leading dim.
     """
     ae_map = dict(ae_map or {})
     if x is None:
         rng = np.random.default_rng(seed)
         x = rng.standard_normal((batch,) + tuple(model.input_shape)
                                 ).astype(np.float32)
-    x = jnp.asarray(x)
-    batch = int(x.shape[0])          # the table's batch is x's, always
+    x = jax.tree.map(jnp.asarray, x)
+    leaves = jax.tree.leaves(x)
+    batch = int(leaves[0].shape[0])  # the table's batch is x's, always
     table = CalibrationTable(model.name, batch,
                              meta={"iters": iters, "quantize": quantize,
                                    "n_splits": len(splits)})
@@ -136,7 +167,7 @@ def calibrate(model, params, splits: Sequence[int], *,
     if include_lc:
         table.put("LC", None, CalEntry(full_s, 0.0, 0))
     if include_rc:
-        input_bytes = int(np.prod(x.shape)) * 4
+        input_bytes = sum(leaf.size * leaf.dtype.itemsize for leaf in leaves)
         table.put("RC", None, CalEntry(0.0, full_s, input_bytes))
 
     for split in splits:

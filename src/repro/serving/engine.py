@@ -49,15 +49,27 @@ class BatchCostModel:
 
     @classmethod
     def for_split(cls, model, params, split_layer: Optional[int],
-                  platform, *, fixed_overhead_s: float = 2e-4) -> "BatchCostModel":
+                  platform, *, fixed_overhead_s: float = 2e-4,
+                  sample=None) -> "BatchCostModel":
         """Server-side cost of one request for a cut after ``split_layer``
-        (``None`` = the server runs the whole model, i.e. scenario RC)."""
+        (``None`` = the server runs the whole model, i.e. scenario RC).
+
+        ``sample``: example input pytree for models whose ``input_shape``
+        cannot describe the input; FLOPs counted at its batch are
+        normalised back to one request.
+        """
+        import jax
+
         from repro.core import stats as S
+        n = 1
+        if sample is not None:
+            n = int(jax.tree.leaves(sample)[0].shape[0])
         if split_layer is None:
-            flops = S.total_flops(model, params, batch=1)
+            flops = S.total_flops(model, params, batch=1, sample=sample)
         else:
-            _, flops = S.flops_split(model, params, split_layer, batch=1)
-        return cls(float(flops), platform.flops_per_s,
+            _, flops = S.flops_split(model, params, split_layer, batch=1,
+                                     sample=sample)
+        return cls(float(flops) / n, platform.flops_per_s,
                    fixed_overhead_s=fixed_overhead_s)
 
     @classmethod

@@ -1,0 +1,214 @@
+"""``repro.api`` facade tests: the Study chain must agree with the legacy
+modules it wraps (saliency -> qos -> netsim), across model families."""
+import numpy as np
+import pytest
+
+from repro.api import QoSRequirements, SplitCandidate, Study
+from repro.api.types import AnalyticCost, CostStack, legal_split_candidates
+from repro.core import qos as Q
+from repro.core.saliency import candidate_split_points, cumulative_saliency
+from repro.core.split import legal_cuts, validate_cut
+from repro.netsim.simulator import flow_latency_s, measure_flow
+
+# one entry per repro.configs family the facade must carry end-to-end:
+# the paper's CNN, a dense LLM, an RNN-family (RWKV) stack, and enc-dec
+CONFIG_NAMES = ["vgg16", "llama3.2-3b", "rwkv6-1.6b", "whisper-tiny"]
+QOS = QoSRequirements(max_latency_s=10.0, min_accuracy=0.0)
+
+
+@pytest.fixture(scope="module", params=CONFIG_NAMES)
+def chained_study(request):
+    study = Study(request.param, seq_len=16, batch=2, seed=0)
+    verdict = study.profile().candidates().simulate().suggest(QOS)
+    return request.param, study, verdict
+
+
+def _legacy_candidates(study):
+    """The candidate list computed with the pre-facade modules."""
+    cs, li = study.cs_curve, study.layer_idx
+    points = candidate_split_points(study.model, cs, li, top_n=3)
+    if not points:
+        ranked = sorted(legal_split_candidates(study.model, cs, li),
+                        key=lambda c: -c.accuracy_proxy)
+        points = [c.split_layer for c in ranked[:3]]
+    return Q.rank_candidates(cs, li, points)
+
+
+def _legacy_verdicts(study):
+    netcfg = study.scenario.netcfg()
+    verdicts = []
+    for cand in _legacy_candidates(study):
+        scen = cand.scenario(study.scenario.edge, study.scenario.server)
+        flow = measure_flow(scen, netcfg, study.model, study.params,
+                            study.input_bytes,
+                            n_frames=study.scenario.n_frames,
+                            sample=study._sample)
+        verdicts.append(Q.SimVerdict(cand, flow_latency_s(flow),
+                                     cand.accuracy_proxy))
+    return verdicts
+
+
+def test_profile_matches_legacy_saliency(chained_study):
+    name, study, _ = chained_study
+    cs = cumulative_saliency(study.model, study.params, study._x,
+                             study._labels, layer_idx=study.layer_idx)
+    np.testing.assert_allclose(np.asarray(study.cs_curve), np.asarray(cs),
+                               rtol=1e-6, err_msg=name)
+
+
+def test_candidates_match_legacy_ranking(chained_study):
+    name, study, _ = chained_study
+    assert ([c.label for c in study.candidate_list]
+            == [c.label for c in _legacy_candidates(study)]), name
+    for c in study.split_candidates():
+        validate_cut(study.model, c.split_layer)   # all SC cuts are legal
+
+
+def test_simulate_matches_legacy_flows(chained_study):
+    name, study, _ = chained_study
+    want = {v.candidate.label: v for v in _legacy_verdicts(study)}
+    assert {v.candidate.label for v in study.verdicts} == set(want), name
+    for v in study.verdicts:
+        w = want[v.candidate.label]
+        assert v.latency_s == pytest.approx(w.latency_s, rel=1e-9), name
+        assert v.accuracy == pytest.approx(w.accuracy), name
+
+
+def test_suggest_matches_legacy_choice(chained_study):
+    name, study, verdict = chained_study
+    legacy = Q.suggest(_legacy_verdicts(study), QOS)
+    assert (verdict is None) == (legacy is None), name
+    if verdict is not None:
+        assert verdict.candidate.label == legacy.candidate.label, name
+        assert verdict.latency_s == pytest.approx(legacy.latency_s, rel=1e-9)
+
+
+def test_chain_is_lazily_cached(chained_study):
+    _, study, _ = chained_study
+    assert study.cs_curve is study.cs_curve
+    assert study.candidate_list is study.candidate_list
+    before = study.verdicts
+    assert study.suggest(QOS) is study._suggested
+    assert study.verdicts is before            # suggest didn't re-simulate
+
+
+# ------------------------------------------------- vgg measured-accuracy ----
+@pytest.fixture(scope="module")
+def vgg_study(toy_data_small):
+    xs, ys = toy_data_small
+    return Study("vgg16", data=(xs, ys), seed=0).profile().candidates()
+
+
+@pytest.fixture(scope="module")
+def toy_data_small():
+    from repro.data.synthetic import toy_images
+    return toy_images(24, hw=16, seed=3)
+
+
+def test_vgg_measured_accuracy_matches_simulator(vgg_study):
+    """With eval data, Study.simulate measures accuracy through the same
+    ApplicationSimulator path the pre-facade scripts used."""
+    from repro.netsim.simulator import ApplicationSimulator
+    study = vgg_study
+    study.simulate()
+    netcfg = study.scenario.netcfg()
+    for v in study.verdicts:
+        cand = v.candidate
+        sim = ApplicationSimulator(study.model, study.params, netcfg,
+                                   ae=study._ae_map.get(cand.split_layer))
+        scen = cand.scenario(study.scenario.edge, study.scenario.server)
+        w = sim.simulate(scen, np.asarray(study._x),
+                         np.asarray(study._labels),
+                         n_frames=study.scenario.n_frames)
+        assert v.accuracy == pytest.approx(w.accuracy), cand.label
+        assert v.latency_s == pytest.approx(w.latency_s, rel=1e-9), cand.label
+
+
+def test_vgg_calibrated_simulation_and_deploy(vgg_study):
+    """calibrate() switches every SC/RC cell to measured costs uniformly,
+    and deploy() returns a runtime equivalent to the unsplit model."""
+    study = vgg_study
+    study.calibrate(iters=1)
+    study.simulate()
+    for v in study.verdicts:
+        src = v.meta.get("cost_source")
+        if v.candidate.kind in ("SC", "RC"):
+            assert src == "measured", v.candidate.label
+    best = study.suggest(QOS)
+    assert best is not None
+    cand = study.split_candidates()[0]
+    rt = study.deploy(candidate=cand)
+    x = np.asarray(study._x[:2])
+    res = rt.infer(x, iters=1)
+    assert res.split_layer == cand.split_layer
+    assert (np.argmax(res.logits, -1)
+            == np.argmax(rt.reference(x), -1)).all()
+
+
+def test_deploy_refuses_uncut_designs(vgg_study):
+    with pytest.raises(ValueError, match="nothing to split"):
+        vgg_study.deploy(candidate="RC")
+
+
+# ------------------------------------------------------- the type layer ----
+def test_split_candidate_absorbs_legacy_shapes():
+    from repro.core.split import SplitPlan
+    c = SplitCandidate.from_any(SplitPlan(4, compression=0.25))
+    assert (c.label, c.split_layer, c.compression) == ("SC@4", 4, 0.25)
+    assert SplitCandidate.from_any(("RC", None)).kind == "RC"
+    assert SplitCandidate.from_any("SC@7") == ("SC@7", 7)
+    assert SplitCandidate.from_any(3) == ("SC@3", 3)
+    # qos.Candidate is the same type, and tuple compatibility holds
+    assert Q.Candidate is SplitCandidate
+    label, split = SplitCandidate.sc(5, 0.8)
+    assert (label, split) == ("SC@5", 5)
+    with pytest.raises(ValueError):
+        SplitCandidate.from_any(("SC@2", 3))
+    with pytest.raises(TypeError):
+        SplitCandidate.from_any(object())
+
+
+def test_legal_split_candidates_single_authority(vgg_small):
+    model, _ = vgg_small
+    cands = legal_split_candidates(model)
+    assert [c.split_layer for c in cands] == legal_cuts(model)
+    for c in cands:
+        c.validate(model)
+    with pytest.raises(ValueError, match="not legal"):
+        SplitCandidate.sc(len(model.layers) - 1).validate(model)
+
+
+def test_cost_stack_prefers_first_source(vgg_small):
+    from repro.runtime.calibrate import calibrate
+    model, params = vgg_small
+    split = model.cut_points()[1]
+    table = calibrate(model, params, [split], batch=1, iters=1,
+                      include_lc=False, include_rc=False)
+    analytic = AnalyticCost(model, params, input_bytes=16 * 16 * 3 * 4)
+    stack = CostStack([table, analytic])
+    assert stack.flow_times("SC", split)["cost_source"] == "measured"
+    other = model.cut_points()[2]
+    assert stack.flow_times("SC", other)["cost_source"] == "analytic"
+    assert stack.server_cost(split, analytic.server).flops_per_item > 0
+
+
+def test_measure_flow_cost_equals_deprecated_calibration(vgg_small):
+    from repro.core.scenarios import Scenario
+    from repro.core.split import SplitPlan
+    from repro.netsim.channel import Channel
+    from repro.netsim.simulator import NetworkConfig
+    from repro.runtime.calibrate import calibrate
+    model, params = vgg_small
+    split = model.cut_points()[1]
+    table = calibrate(model, params, [split], batch=1, iters=1)
+    netcfg = NetworkConfig("tcp", Channel(1e-3, 100e6, 100e6, seed=0))
+    sc = Scenario("SC", SplitPlan(split))
+    new = measure_flow(sc, netcfg, model, params, 16 * 16 * 3 * 4,
+                       cost=table)
+    with pytest.warns(DeprecationWarning):
+        old = measure_flow(sc, netcfg, model, params, 16 * 16 * 3 * 4,
+                           calibration=table)
+    assert new["edge_s"] == old["edge_s"]
+    assert new["server_s"] == old["server_s"]
+    assert new["wire_bytes"] == old["wire_bytes"]
+    assert new["cost_source"] == old["cost_source"] == "measured"
