@@ -55,6 +55,16 @@ GATE_SPECS = {
     "api": [
         ("study_overhead_pct", "lower", float("inf"), 5.0),
     ],
+    # simulated pipeline numbers are deterministic (event engine +
+    # analytic stage times), so they gate at the default tolerance; the
+    # speedup must not collapse; the sim-vs-exec error divides by a
+    # wall clock and gates only on a generous absolute ceiling
+    "pipeline": [
+        ("pipeline.sequential_ms", "lower", None, None),
+        ("pipeline.pipelined_ms", "lower", None, None),
+        ("pipeline.speedup", "higher", None, None),
+        ("sim_vs_exec.err_analytic_pct", "lower", float("inf"), 75.0),
+    ],
 }
 
 

@@ -29,20 +29,33 @@ _EXPORTS = {
     "AnalyticCost": ("repro.api.types", "AnalyticCost"),
     "CostStack": ("repro.api.types", "CostStack"),
     "legal_split_candidates": ("repro.api.types", "legal_split_candidates"),
+    "legal_cut_list_candidates": ("repro.api.types",
+                                  "legal_cut_list_candidates"),
     # the vocabulary end-to-end scripts need
     "QoSRequirements": ("repro.core.qos", "QoSRequirements"),
     "SimVerdict": ("repro.core.qos", "SimVerdict"),
     "SplitPlan": ("repro.core.split", "SplitPlan"),
+    "validate_cuts": ("repro.core.split", "validate_cuts"),
+    "legal_cut_lists": ("repro.core.split", "legal_cut_lists"),
     "Scenario": ("repro.core.scenarios", "Scenario"),
     "PLATFORMS": ("repro.core.scenarios", "PLATFORMS"),
     "Channel": ("repro.netsim.channel", "Channel"),
     "INTERFACES": ("repro.netsim.channel", "INTERFACES"),
+    "compose_channels": ("repro.netsim.channel", "compose_channels"),
     "NetworkConfig": ("repro.netsim.simulator", "NetworkConfig"),
+    "NetworkPath": ("repro.netsim.simulator", "NetworkPath"),
+    "PipelineResult": ("repro.netsim.simulator", "PipelineResult"),
+    "simulate_pipeline": ("repro.netsim.simulator", "simulate_pipeline"),
     "DeviceClass": ("repro.fleet.traffic", "DeviceClass"),
     "generate_trace": ("repro.fleet.traffic", "generate_trace"),
     "SearchSpace": ("repro.fleet.planner", "SearchSpace"),
     "DeploymentPlanner": ("repro.fleet.planner", "DeploymentPlanner"),
     "simulate_deployment": ("repro.fleet.planner", "simulate_deployment"),
+    "Tier": ("repro.fleet.planner", "Tier"),
+    "TierTopology": ("repro.fleet.planner", "TierTopology"),
+    "TierPlan": ("repro.fleet.planner", "TierPlan"),
+    "plan_tiers": ("repro.fleet.planner", "plan_tiers"),
+    "suggest_tier_plan": ("repro.fleet.planner", "suggest_tier_plan"),
     "CalibrationTable": ("repro.runtime.calibrate", "CalibrationTable"),
     "calibrate": ("repro.runtime.calibrate", "calibrate"),
     # toy data for the runnable walkthroughs

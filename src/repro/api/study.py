@@ -12,9 +12,16 @@ representations at every seam.  A ``Study`` carries one
     best = (study.profile()            # CS curve (Grad-CAM saliency)
                  .candidates()         # legal cuts + LC/RC, CS-ranked
                  .calibrate()          # optional: measured cost tables
-                 .simulate()           # single link (or fleet=(trace, mix))
+                 .simulate()           # single link (or fleet=(trace, mix),
+                                       #  or path=[hop, hop] for K-cut lists)
                  .suggest(qos))        # Pareto + best QoS match
-    runtime = study.deploy()           # ready SplitRuntime for the cut
+    runtime = study.deploy()           # ready SplitRuntime for the cut(s)
+
+Multi-tier chains ride the same verbs: ``simulate(path=...)`` prices
+K-cut candidates over a multi-hop ``NetworkPath`` (sequentially and
+pipelined), ``suggest(qos, tiers=TierTopology(...))`` searches cut-list
+x stage->tier assignment, and ``deploy()`` then executes the winning cut
+list as a K+1-stage runtime.
 
 Stages are lazily cached: each runs at most once unless called again
 explicitly, and any stage you skip is run on demand with defaults (so
@@ -44,7 +51,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.api.types import SplitCandidate, legal_split_candidates
+from repro.api.types import (SplitCandidate, legal_cut_list_candidates,
+                             legal_split_candidates)
 from repro.core import bottleneck as B
 from repro.core import qos as Q
 from repro.core.saliency import candidate_split_points, cumulative_saliency
@@ -52,7 +60,7 @@ from repro.core.scenarios import PLATFORMS, PlatformProfile
 from repro.models.layered import LayeredModel
 from repro.netsim.channel import Channel
 from repro.netsim.simulator import (ApplicationSimulator, NetworkConfig,
-                                    flow_latency_s, measure_flow)
+                                    as_path, flow_latency_s, measure_flow)
 
 _VGG_NAMES = ("vgg16", "vgg16-cifar10", "vgg")
 
@@ -116,6 +124,10 @@ class Study:
         self._points = None
         self._suggested = None
         self._plans = None
+        self._path = None                # NetworkPath of the last path sim
+        self._tier_topology = None
+        self._tier_plans = None
+        self._tier_best = None
 
     # ------------------------------------------------------- resolution ----
     def _resolve_model(self, model, params, reduce, batch, seq_len):
@@ -347,8 +359,10 @@ class Study:
             return NetworkConfig(self.scenario.protocol, network)
         raise TypeError("network must be a NetworkConfig or Channel")
 
-    def simulate(self, network=None, fleet=None, *,
-                 n_frames: Optional[int] = None,
+    def simulate(self, network=None, fleet=None, path=None, *,
+                 n_frames: Optional[int] = None, tiers=None,
+                 n_micro: int = 4, top_m: int = 8,
+                 batch: Optional[int] = None,
                  space=None, **space_overrides) -> "Study":
         """Stage 3: communication-aware simulation of every candidate.
 
@@ -356,14 +370,32 @@ class Study:
         default: the study scenario's link) — produces one
         ``SimVerdict`` per candidate.  ``fleet``: ``(trace,
         device_classes)`` — runs the QoS deployment planner over
-        split x protocol x batch x replicas instead.  Cost source
-        (analytic vs calibrated) is selected uniformly for both paths by
-        the preceding :meth:`calibrate` call, per cell.
+        split x protocol x batch x replicas instead.  ``path``: a
+        multi-hop chain (``netsim.NetworkPath`` or a sequence of
+        ``Channel``/``NetworkConfig`` hops) — simulates K-cut candidates
+        (K = number of hops), each priced sequentially *and* as an
+        ``n_micro``-way pipelined microbatch schedule; the verdict
+        latency is the pipelined one.  ``tiers`` names the K+1 platform
+        chain for the path mode (default: the scenario's edge, then its
+        server for every later stage); ``top_m`` bounds the CS-ranked
+        cut lists simulated.  Cost source (analytic vs calibrated) is
+        selected uniformly for single-link and fleet modes by the
+        preceding :meth:`calibrate` call, per cell; path mode prices
+        analytically.
+
+        **Latency unit**: single-link verdicts are per *frame*
+        (``batch=1``); path-mode verdicts are the makespan of one
+        ``batch``-frame sample (microbatching needs a batch to chop;
+        default: the study sample's own batch) — pass ``batch=1`` to
+        compare against single-link numbers under one QoS budget.
         """
         n_frames = self.scenario.n_frames if n_frames is None else n_frames
         if fleet is not None:
             return self._simulate_fleet(fleet, n_frames, space,
                                         space_overrides)
+        if path is not None:
+            return self._simulate_path(path, tiers, n_frames, n_micro,
+                                       top_m, batch)
         netcfg = self._netcfg(network)
         verdicts = []
         measured = self._data is not None and self.cfg is None
@@ -391,7 +423,52 @@ class Study:
                           "edge_s": flow["edge_s"],
                           "server_s": flow["server_s"]}))
         self._verdicts, self._mode = verdicts, "link"
-        self._suggested = self._plans = None
+        self._path = None            # a non-path sim owns later deploys
+        self._suggested = self._plans = self._tier_best = None
+        return self
+
+    def _frame_batch(self) -> int:
+        """The study sample's own frame batch — what the multi-tier
+        modes price one 'sample' as."""
+        import jax as _jax
+        return int(_jax.tree.leaves(self._sample if self._sample is not None
+                                    else self._x)[0].shape[0])
+
+    def _simulate_path(self, path, tiers, n_frames, n_micro,
+                       top_m, batch=None) -> "Study":
+        """Multi-hop link mode: one verdict per K-cut candidate."""
+        batch = self._frame_batch() if batch is None else batch
+        path = as_path(path, self.scenario.protocol)
+        if tiers is not None:
+            tiers = tuple(_platform(t) for t in tiers)
+        cands = legal_cut_list_candidates(
+            self.model, len(path), self.cs_curve, self.layer_idx,
+            top_m=top_m)
+        if not cands:
+            raise ValueError(
+                f"{self.model.name!r} has no legal {len(path)}-cut lists "
+                f"covered by the CS curve (fewer cuts than hops?)")
+        verdicts = []
+        for cand in cands:
+            cand = replace(cand, compression=self.compression)
+            scen = cand.scenario(self.scenario.edge, self.scenario.server)
+            flow = measure_flow(scen, path, self.model, self.params,
+                                self.input_bytes, n_frames=n_frames,
+                                sample=self._sample, tiers=tiers,
+                                batch=batch, n_micro=n_micro)
+            pipe = flow["pipeline"]
+            verdicts.append(Q.SimVerdict(
+                cand, pipe.latency_s, cand.accuracy_proxy,
+                meta={"sequential_s": flow_latency_s(flow),
+                      "speedup": pipe.speedup, "n_micro": n_micro,
+                      "batch": batch,
+                      "stage_s": flow["stage_s"],
+                      "hop_bytes": flow["hop_bytes"],
+                      "wire_bytes": flow["wire_bytes"],
+                      "cost_source": flow["cost_source"]}))
+        self._verdicts, self._mode = verdicts, "link"
+        self._path = path
+        self._suggested = self._plans = self._tier_best = None
         return self
 
     def _proxy_accuracy_fn(self):
@@ -429,7 +506,8 @@ class Study:
         self._fleet, self._space = (trace, devices), space
         self._points = self._planner.search(trace, devices, space)
         self._mode = "fleet"
-        self._suggested = self._plans = None
+        self._path = None
+        self._suggested = self._plans = self._tier_best = None
         return self
 
     @property
@@ -469,12 +547,36 @@ class Study:
             return self._planner.pareto_front(self._points)
         return Q.pareto(self.verdicts)
 
-    def suggest(self, qos):
+    def suggest(self, qos, tiers=None, *, n_micro: int = 4,
+                batch: Optional[int] = None, **tier_kw):
         """Stage 4: the best design meeting ``qos``
         (:class:`~repro.core.qos.QoSRequirements`).  Single-link mode
         returns a ``SimVerdict`` (or None); fleet mode returns
         ``{device_name: PlanPoint | None}``.  Runs any missing stage with
-        defaults first."""
+        defaults first.
+
+        ``tiers``: a ``fleet.TierTopology`` (device -> edge -> cloud
+        chain) — searches cut-list x stage->tier assignment over it
+        (``fleet.plan_tiers``, pipelined microbatching included) and
+        returns the best feasible ``TierPlan`` (or None); a later
+        :meth:`deploy` executes that plan's cut list live.  Tier-plan
+        latencies are makespans of one ``batch``-frame sample (default:
+        the study sample's own batch) — size the QoS budget to that
+        unit, or pass ``batch=1`` for per-frame budgets.
+        """
+        if tiers is not None:
+            from repro.fleet.planner import plan_tiers, suggest_tier_plan
+            self._tier_topology = tiers
+            self._tier_plans = plan_tiers(
+                self.model, self.params, tiers, n_micro=n_micro,
+                cs_curve=self.cs_curve, layer_idx=self.layer_idx,
+                compression=self.compression, sample=self._sample,
+                batch=self._frame_batch() if batch is None else batch,
+                **tier_kw)
+            self._tier_best = suggest_tier_plan(self._tier_plans, qos)
+            self._suggested = self._plans = None     # latest suggestion wins
+            return self._tier_best
+        self._tier_best = None                       # latest suggestion wins
         if self._mode == "fleet":
             self._plans = self._planner.suggest(qos, self._fleet,
                                                 points=self._points)
@@ -483,11 +585,30 @@ class Study:
         self._suggested = best
         return best
 
+    @property
+    def tier_plans(self) -> list:
+        """Every evaluated ``TierPlan`` of the last ``suggest(qos,
+        tiers=...)`` call, sorted by pipelined latency."""
+        if self._tier_plans is None:
+            raise RuntimeError("tier_plans needs suggest(qos, tiers=...) "
+                               "first")
+        return self._tier_plans
+
     def _chosen_candidate(self, candidate, device) -> tuple:
-        """(candidate, wire protocol) the deployment should execute."""
+        """(candidate, wire hops) the deployment should execute.
+
+        ``hops`` is the per-hop pricing argument for ``SplitRuntime``:
+        a protocol string (study channel on every hop), a list of
+        ``NetworkConfig``\\ s, or ``NetworkPath`` hops.
+        """
         if candidate is not None:
             return (SplitCandidate.from_any(candidate).validate(self.model),
                     self.scenario.protocol)
+        if self._tier_best is not None:      # multi-tier suggestion
+            plan = self._tier_best
+            cand = SplitCandidate.sc(plan.splits, plan.accuracy_proxy,
+                                     compression=self.compression)
+            return cand, plan.runtime_path(self._tier_topology)
         if self._plans is not None:          # fleet suggestion
             plans = {d: p for d, p in self._plans.items() if p is not None}
             if device is None and len(plans) == 1:
@@ -501,22 +622,26 @@ class Study:
         if self._suggested is None:
             raise RuntimeError("deploy() after suggest(qos), or pass "
                                "candidate=")
-        return (SplitCandidate.from_any(self._suggested.candidate),
-                self.scenario.protocol)
+        cand = SplitCandidate.from_any(self._suggested.candidate)
+        if self._path is not None and len(cand.splits) == len(self._path):
+            return cand, list(self._path.hops)   # the simulated hop chain
+        return cand, self.scenario.protocol
 
     def deploy(self, candidate=None, *, device=None, serve: bool = False,
                n_slots: int = 4, quantize: bool = True, backend=None):
-        """Stage 5: a ready runtime for the chosen cut.
+        """Stage 5: a ready runtime for the chosen cut (or cut list).
 
         Returns a :class:`~repro.runtime.engine.SplitRuntime` executing
-        the suggested SC cut live (head -> int8 wire -> tail, the study
-        scenario's channel pricing the hop), or — with ``serve=True`` —
-        a :class:`~repro.runtime.engine.TailServer` batching many
-        clients' tail requests.  ``candidate`` overrides the suggestion;
-        ``device`` picks a fleet plan.  RC/LC designs have no cut to
-        execute and raise with guidance.
+        the suggested SC design live — stage -> int8 wire -> stage, one
+        hop per cut, the study scenario's channel (or the suggested tier
+        plan's / simulated path's hop chain) pricing each hop — or, with
+        ``serve=True``, a :class:`~repro.runtime.engine.TailServer`
+        batching many clients' tail requests.  ``candidate`` overrides
+        the suggestion (``'SC@2+5'`` / a cut tuple name multi-cut
+        designs); ``device`` picks a fleet plan.  RC/LC designs have no
+        cut to execute and raise with guidance.
         """
-        cand, protocol = self._chosen_candidate(candidate, device)
+        cand, hops = self._chosen_candidate(candidate, device)
         if cand.kind != "SC":
             raise ValueError(
                 f"suggested design is {cand.label}: nothing to split — run "
@@ -524,16 +649,18 @@ class Study:
                 f"{'server' if cand.kind == 'RC' else 'edge'} instead "
                 f"(deploy() builds split runtimes; pass candidate='SC@<k>' "
                 f"to force a cut)")
-        split = cand.split_layer
+        splits = cand.splits
+        ae = ({c: self._ae_map[c] for c in splits if c in self._ae_map}
+              or None)
         if serve:
             from repro.runtime.engine import TailServer
             from repro.runtime.partition import make_partition
-            part = make_partition(self.model, self.params, split,
-                                  self._ae_map.get(split))
+            part = make_partition(self.model, self.params, splits, ae)
             return TailServer(part, n_slots=n_slots)
         from repro.runtime.engine import SplitRuntime
-        return SplitRuntime(self.model, self.params, split,
-                            ae=self._ae_map.get(split),
-                            channel=self.scenario.channel,
-                            protocol=protocol,
-                            quantize=quantize, backend=backend)
+        if isinstance(hops, str):            # protocol over the study link
+            return SplitRuntime(self.model, self.params, splits, ae=ae,
+                                channel=self.scenario.channel, protocol=hops,
+                                quantize=quantize, backend=backend)
+        return SplitRuntime(self.model, self.params, splits, ae=ae,
+                            channel=hops, quantize=quantize, backend=backend)

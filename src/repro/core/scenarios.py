@@ -16,7 +16,7 @@ from typing import Optional
 import jax
 
 from repro.core import stats as S
-from repro.core.split import SplitPlan, wire_payload_bytes
+from repro.core.split import SplitPlan, hop_payload_bytes
 
 
 @dataclass(frozen=True)
@@ -106,10 +106,7 @@ def scenario_times_and_payload(scenario: Scenario, model, params,
     ``input_shape`` alone cannot describe the input.  FLOPs are counted
     at the sample's own leading dim and rescaled linearly to ``batch``.
     """
-    scale = 1.0
-    if sample is not None:
-        import jax
-        scale = batch / int(jax.tree.leaves(sample)[0].shape[0])
+    scale = _sample_scale(batch, sample)
     total_flops = S.total_flops(model, params, batch, sample=sample) * scale
     if scenario.kind == "LC":
         return {"edge_s": scenario.edge.compute_time(total_flops),
@@ -119,10 +116,42 @@ def scenario_times_and_payload(scenario: Scenario, model, params,
                 "server_s": scenario.server.compute_time(total_flops),
                 "wire_bytes": input_bytes}
     plan = scenario.split_plan
-    head_f, tail_f = S.flops_split(model, params, plan.split_layer, batch,
-                                   sample=sample)
-    head_f, tail_f = head_f * scale, tail_f * scale
-    wire = wire_payload_bytes(model, params, plan, batch, sample=sample)
-    return {"edge_s": scenario.edge.compute_time(head_f),
-            "server_s": scenario.server.compute_time(tail_f),
-            "wire_bytes": wire}
+    tiers = (scenario.edge,) + (scenario.server,) * len(plan.splits)
+    st = stage_times_and_payloads(model, params, plan, tiers, batch,
+                                  sample=sample)
+    return {"edge_s": st["stage_s"][0],
+            "server_s": sum(st["stage_s"][1:]),
+            "wire_bytes": sum(st["hop_bytes"])}
+
+
+def _sample_scale(batch: int, sample) -> float:
+    """FLOPs are counted at the sample's own leading dim and rescaled
+    linearly to ``batch``."""
+    if sample is None:
+        return 1.0
+    import jax
+    return batch / int(jax.tree.leaves(sample)[0].shape[0])
+
+
+def stage_times_and_payloads(model, params, plan: SplitPlan, tiers,
+                             batch: int = 1, *, sample=None) -> dict:
+    """Per-stage compute times and per-hop payloads of a K-cut plan.
+
+    ``tiers`` is the K+1 platform chain (device, ..., server) the stages
+    run on; hop k carries the (compressed) activation after cut
+    ``plan.splits[k]``.  This is the multi-tier generalisation of the
+    SC branch of :func:`scenario_times_and_payload`, which delegates here
+    with the 2-platform (edge, server) chain — the analytic stage/hop
+    numbers ``netsim.simulator.measure_flow`` prices a ``NetworkPath``
+    with.
+    """
+    cuts = plan.splits
+    if len(tiers) != len(cuts) + 1:
+        raise ValueError(f"{len(cuts)} cuts need {len(cuts) + 1} tiers, "
+                         f"got {len(tiers)}")
+    scale = _sample_scale(batch, sample)
+    stage_f = S.flops_stages(model, params, cuts, batch, sample=sample)
+    hop_bytes = hop_payload_bytes(model, params, plan, batch, sample=sample)
+    return {"stage_s": [t.compute_time(f * scale)
+                        for t, f in zip(tiers, stage_f)],
+            "hop_bytes": hop_bytes}

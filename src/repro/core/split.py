@@ -35,22 +35,45 @@ else:  # jax <= 0.4.x keeps it in experimental, with check_rep
 
 @dataclass(frozen=True)
 class SplitPlan:
-    """A concrete SC design point.
+    """A concrete SC design point: one or more ordered cuts.
 
     The portable form of an SC candidate (``repro.api.types.SplitCandidate``
     carries one of these as its executable payload via ``.plan()``).
+    ``splits`` is the canonical ordered cut list; the historical scalar
+    ``split_layer`` stays as the first (edge-side) cut, so every 1-cut
+    consumer keeps working unchanged — ``SplitPlan(4)`` and
+    ``SplitPlan(4, splits=(4,))`` are the same design point.
     """
-    split_layer: int              # cut after this layer index
+    split_layer: int              # first cut (after this layer index)
     compression: float = 0.5      # bottleneck rate (paper: 50%)
     wire_dtype_bytes: int = 4
+    splits: tuple = None          # full ordered cut list; (split_layer,) if None
+
+    def __post_init__(self):
+        if self.splits is None:
+            cuts = () if self.split_layer is None else (int(self.split_layer),)
+        else:
+            cuts = normalize_cuts(self.splits)
+        object.__setattr__(self, "splits", cuts)
+        if self.split_layer is None and cuts:
+            object.__setattr__(self, "split_layer", cuts[0])
+
+    @property
+    def n_stages(self) -> int:
+        return len(self.splits) + 1
 
     def describe(self, model: LayeredModel) -> str:
-        """Human-readable head/bottleneck/tail layout of this plan on
-        ``model`` (legality-checked through :func:`validate_cut`)."""
-        validate_cut(model, self.split_layer)
-        return (f"head=[0..{self.split_layer}] "
-                f"bottleneck(rate={self.compression}) "
-                f"tail=[{self.split_layer + 1}..{len(model.layers) - 1}]")
+        """Human-readable stage layout of this plan on ``model``
+        (legality-checked through :func:`validate_cuts`)."""
+        cuts = validate_cuts(model, self.splits)
+        if len(cuts) == 1:
+            return (f"head=[0..{self.split_layer}] "
+                    f"bottleneck(rate={self.compression}) "
+                    f"tail=[{self.split_layer + 1}..{len(model.layers) - 1}]")
+        bounds = (0,) + tuple(c + 1 for c in cuts) + (len(model.layers),)
+        stages = " | ".join(f"stage{i}=[{a}..{b - 1}]"
+                            for i, (a, b) in enumerate(zip(bounds, bounds[1:])))
+        return f"{stages} bottleneck(rate={self.compression})"
 
 
 def legal_cuts(model: LayeredModel) -> list[int]:
@@ -74,17 +97,79 @@ def validate_cut(model: LayeredModel, split_layer: int) -> int:
     return split_layer
 
 
+def normalize_cuts(splits) -> tuple:
+    """Coerce a scalar cut or an iterable of cuts into the canonical
+    ordered cut tuple (the ``splits`` convention: ints, ascending).
+
+    Strict monotonicity is enforced here, at the point every cut list is
+    constructed (``SplitPlan``, ``SplitCandidate``, the planners), so a
+    shuffled or duplicated list fails loudly instead of silently pricing
+    empty/overlapping stages; per-cut *legality* against a model stays
+    with :func:`validate_cuts`.
+    """
+    if not hasattr(splits, "__iter__"):
+        return (int(splits),)
+    cuts = tuple(int(s) for s in splits)
+    if any(b <= a for a, b in zip(cuts, cuts[1:])):
+        raise ValueError(f"cut list {cuts} must be strictly increasing "
+                         f"(every stage needs at least one layer)")
+    return cuts
+
+
+def validate_cuts(model: LayeredModel, splits) -> tuple:
+    """Check an ordered cut list against the model's legality rule.
+
+    The multi-cut extension of :func:`validate_cut` and, like it, the
+    single legality authority: a legal cut list is non-empty, strictly
+    increasing (each stage runs at least one layer — enforced by
+    :func:`normalize_cuts`), and every cut is individually legal.
+    Returns the normalised tuple.
+    """
+    cuts = normalize_cuts(splits)
+    if not cuts:
+        raise ValueError(f"need at least one cut for {model.name!r}; "
+                         f"legal cuts: {model.cut_points()}")
+    for c in cuts:
+        validate_cut(model, c)
+    return cuts
+
+
+def legal_cut_lists(model: LayeredModel, n_cuts: int) -> list:
+    """Every legal ordered cut list with exactly ``n_cuts`` cuts.
+
+    The K-way search space of the multi-tier planner: all strictly
+    increasing ``n_cuts``-combinations of :func:`legal_cuts`.
+    """
+    import itertools
+    if n_cuts < 1:
+        raise ValueError(f"n_cuts must be >= 1, got {n_cuts}")
+    return list(itertools.combinations(legal_cuts(model), n_cuts))
+
+
 def wire_payload_bytes(model: LayeredModel, params, plan: SplitPlan,
                        batch: int = 1, *, sample=None) -> int:
-    """Bytes crossing the wire per ``batch`` frames under ``plan``.
+    """Bytes crossing the first (edge-side) wire hop per ``batch`` frames
+    under ``plan`` — see :func:`hop_payload_bytes` for the whole chain.
 
     ``sample``: example input (array or pytree) for models whose
     ``input_shape`` alone cannot describe the input — see
     ``LayeredModel.activation_shapes``.
     """
+    return hop_payload_bytes(model, params, plan, batch, sample=sample)[0]
+
+
+def hop_payload_bytes(model: LayeredModel, params, plan: SplitPlan,
+                      batch: int = 1, *, sample=None) -> list:
+    """Per-hop wire payloads (bytes per ``batch`` frames) of a K-cut plan.
+
+    Hop k carries the activation after cut ``plan.splits[k]``, compressed
+    at the plan's bottleneck rate (one AE per cut, same rate — the
+    analytic counterpart of the runtime's per-hop codec).
+    """
     shapes = model.activation_shapes(params, batch, sample=sample)
-    feat = shapes[plan.split_layer][1:]
-    return batch * B.payload_bytes(feat, plan.compression, plan.wire_dtype_bytes)
+    return [batch * B.payload_bytes(shapes[c][1:], plan.compression,
+                                    plan.wire_dtype_bytes)
+            for c in plan.splits]
 
 
 # ------------------------------------------------ multi-pod pipeline step ----

@@ -91,10 +91,23 @@ def total_flops(model: LayeredModel, params, batch: int = 1, *,
 def flops_split(model: LayeredModel, params, split_layer: int,
                 batch: int = 1, *, sample=None) -> tuple:
     """(head_flops, tail_flops) for a cut after ``split_layer`` (2x mult-adds)."""
-    rows = summary(model, params, batch, sample=sample)
-    head = sum(r.mult_adds for r in rows[:split_layer + 1]) * 2
-    tail = sum(r.mult_adds for r in rows[split_layer + 1:]) * 2
+    head, tail = flops_stages(model, params, (split_layer,), batch,
+                              sample=sample)
     return head, tail
+
+
+def flops_stages(model: LayeredModel, params, cuts, batch: int = 1, *,
+                 sample=None) -> list:
+    """Per-stage forward FLOPs for an ordered cut list (2x mult-adds).
+
+    ``cuts = (c1, .., cK)`` yields K+1 stage costs: layers ``[0, c1]``,
+    ``(c1, c2]``, ..., ``(cK, end)`` — the multi-tier generalisation of
+    :func:`flops_split` (which delegates here for the 1-cut case).
+    """
+    rows = summary(model, params, batch, sample=sample)
+    bounds = [0] + [c + 1 for c in cuts] + [len(rows)]
+    return [sum(r.mult_adds for r in rows[a:b]) * 2
+            for a, b in zip(bounds, bounds[1:])]
 
 
 def format_table(rows: list, max_rows: int = 0) -> str:

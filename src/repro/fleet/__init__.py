@@ -5,4 +5,5 @@ from .traffic import (ARRIVAL_PATTERNS, DeviceClass, FleetRequest,  # noqa: F401
                       Trace, generate_trace)
 from .cluster import ClusterConfig, ClusterSim, ClusterStats        # noqa: F401
 from .planner import (DeploymentPlanner, PlanPoint, SearchSpace,    # noqa: F401
-                      simulate_deployment)
+                      Tier, TierPlan, TierTopology, plan_tiers,
+                      simulate_deployment, suggest_tier_plan)

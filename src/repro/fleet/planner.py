@@ -11,22 +11,34 @@ accuracy under loss) and per deployment with ``fleet.cluster`` (queueing +
 dynamic batching on the ``serving.engine`` replica cost model).  Output is
 a Pareto front over (p99 latency, accuracy, server FLOPs/s) and a
 ``suggest(qos, fleet)`` API that picks one plan per device class.
+
+Beyond the single device->server link, :func:`plan_tiers` searches
+multi-tier chains (:class:`TierTopology`: device -> edge -> cloud):
+cut-list x stage->tier assignment, each design point priced sequentially
+and as a pipelined microbatched schedule
+(``netsim.simulator.simulate_pipeline``).
 """
 from __future__ import annotations
 
 import itertools
+import warnings
 from dataclasses import dataclass
 from typing import Optional, Sequence
 
 import numpy as np
 
 from repro.api.types import SplitCandidate, legal_split_candidates
+from repro.core import bottleneck as B
+from repro.core import stats as S
 from repro.core.qos import QoSRequirements, pareto_nd, rank_candidates
-from repro.core.scenarios import PLATFORMS, Scenario
+from repro.core.scenarios import PLATFORMS, PlatformProfile, Scenario
+from repro.core.split import legal_cut_lists, legal_cuts
 from repro.fleet.cluster import ClusterConfig, ClusterSim
 from repro.fleet.traffic import DeviceClass, Trace
+from repro.netsim.channel import Channel, compose_channels
 from repro.netsim.simulator import (ApplicationSimulator, NetworkConfig,
-                                    measure_flow)
+                                    NetworkPath, measure_flow,
+                                    simulate_pipeline)
 from repro.serving.engine import BatchCostModel
 
 
@@ -40,6 +52,203 @@ class SearchSpace:
     top_k_splits: int = 2            # CS-ranked prune before simulation
     include_rc: bool = True
     include_lc: bool = False
+
+
+# ------------------------------------------------------- tier topologies ----
+@dataclass(frozen=True)
+class Tier:
+    """One compute tier of a multi-hop deployment chain.
+
+    ``uplink`` is the physical link toward the next tier (None for the
+    last); ``platform`` may be a ``core.scenarios`` profile name.
+    """
+    name: str
+    platform: PlatformProfile
+    uplink: Optional[Channel] = None
+    protocol: str = "tcp"
+
+    def __post_init__(self):
+        if isinstance(self.platform, str):
+            if self.platform not in PLATFORMS:
+                raise KeyError(f"unknown platform {self.platform!r}; "
+                               f"known: {sorted(PLATFORMS)}")
+            object.__setattr__(self, "platform", PLATFORMS[self.platform])
+
+
+@dataclass(frozen=True)
+class TierTopology:
+    """An ordered device -> edge -> ... -> cloud tier chain.
+
+    The search space of :func:`plan_tiers`: stages of a cut list are
+    assigned to an increasing subsequence of these tiers (sensing always
+    on tier 0), the payload store-and-forwards through any skipped tier.
+    """
+    tiers: tuple
+
+    def __post_init__(self):
+        tiers = tuple(self.tiers)
+        object.__setattr__(self, "tiers", tiers)
+        if len(tiers) < 2:
+            raise ValueError("a topology needs at least 2 tiers")
+        missing = [t.name for t in tiers[:-1] if t.uplink is None]
+        if missing:
+            raise ValueError(f"tiers {missing} have no uplink toward the "
+                             f"next tier")
+
+    def __len__(self):
+        return len(self.tiers)
+
+    def __iter__(self):
+        return iter(self.tiers)
+
+    def __getitem__(self, i) -> Tier:
+        return self.tiers[i]
+
+    @property
+    def platforms(self) -> tuple:
+        return tuple(t.platform for t in self.tiers)
+
+    def path(self) -> NetworkPath:
+        """The full physical link chain as a :class:`NetworkPath`."""
+        return NetworkPath(tuple(NetworkConfig(t.protocol, t.uplink)
+                                 for t in self.tiers[:-1]))
+
+
+@dataclass(frozen=True)
+class TierPlan:
+    """One evaluated (cut list, stage->tier assignment) design point."""
+    splits: tuple                    # ordered cut list (K cuts)
+    stage_tiers: tuple               # tier names, one per stage (K+1)
+    tier_index: tuple                # tier indices, one per stage (K+1)
+    latency_s: float                 # pipelined one-sample makespan
+    sequential_s: float              # no-overlap reference
+    n_micro: int
+    stage_s: tuple                   # per physical tier (pass-throughs 0)
+    hop_bytes: tuple                 # per physical link
+    accuracy_proxy: float = 0.0      # min CS over the cuts (weakest stage)
+
+    @property
+    def speedup(self) -> float:
+        return self.sequential_s / self.latency_s if self.latency_s else 1.0
+
+    def satisfies(self, qos: QoSRequirements) -> bool:
+        return (self.latency_s <= qos.max_latency_s
+                and self.accuracy_proxy >= qos.min_accuracy)
+
+    def runtime_path(self, topology: TierTopology) -> list:
+        """One :class:`NetworkConfig` per *logical* wire hop, for a
+        ``runtime.SplitRuntime`` executing this plan.  A logical hop that
+        store-and-forwards through skipped tiers is priced over the
+        composed effective channel (``netsim.channel.compose_channels``).
+        """
+        out = []
+        for j in range(len(self.splits)):
+            a, b = self.tier_index[j], self.tier_index[j + 1]
+            links = [topology[t] for t in range(a, b)]
+            out.append(NetworkConfig(
+                links[0].protocol,
+                compose_channels([t.uplink for t in links])))
+        return out
+
+
+def plan_tiers(model, params, topology: TierTopology, *,
+               n_micro: int = 4, cs_curve=None, layer_idx=None,
+               compression: float = 0.5, wire_dtype_bytes: int = 4,
+               batch: int = 1, sample=None, cut_pool=None,
+               cut_counts=None, max_evals: int = 2048) -> list:
+    """Search cut-list x stage->tier assignment over ``topology``.
+
+    Every legal cut list of each considered length (default: 1 up to the
+    number of links) is combined with every increasing assignment of its
+    stages onto the tier chain (stage 0 always on tier 0 — the sensing
+    node; skipped tiers forward the payload without computing, ending
+    early is allowed).  Each combination is priced analytically per stage
+    and hop, then scheduled twice: sequentially and as an ``n_micro``-way
+    microbatched pipeline (``netsim.simulator.simulate_pipeline``).
+
+    Returns :class:`TierPlan`\\ s sorted by pipelined latency.
+    ``cut_pool`` restricts the cuts considered (e.g. a CS shortlist);
+    ``max_evals`` bounds the combinatorial sweep — exceeding it warns
+    and truncates (narrow the pool rather than raising it for
+    exhaustiveness).
+    """
+    from repro.core.scenarios import _sample_scale
+    n_links = len(topology) - 1
+    rows = S.summary(model, params, batch, sample=sample)
+    # summary() counts at the sample's own leading dim when one is given;
+    # rescale linearly to the requested batch (the shared first-order rule)
+    scale = _sample_scale(batch, sample)
+    prefix = np.cumsum([0] + [r.mult_adds for r in rows]) * 2 * scale
+    pos = ({sp: i for i, sp in enumerate(layer_idx)}
+           if cs_curve is not None else {})
+    pool = set(legal_cuts(model))
+    if cut_pool is not None:
+        pool &= set(cut_pool)
+    if cs_curve is not None:
+        pool &= set(pos)
+
+    def payload(cut: int) -> int:
+        shape = rows[cut].output_shape
+        return int(round(shape[0] * scale)) * B.payload_bytes(
+            shape[1:], compression, wire_dtype_bytes)
+
+    platforms = topology.platforms
+    full_path = topology.path()
+    combos = []
+    for k in (cut_counts or range(1, n_links + 1)):
+        if k > n_links or k > len(pool):
+            continue
+        # enumeration routes through the legality authority, restricted
+        # to the pool — never a locally re-derived cut set
+        cut_lists = [cl for cl in legal_cut_lists(model, k)
+                     if all(c in pool for c in cl)]
+        for assign in itertools.combinations(range(1, n_links + 1), k):
+            combos.extend((assign, cuts) for cuts in cut_lists)
+    if len(combos) > max_evals:
+        warnings.warn(
+            f"plan_tiers evaluated only the first {max_evals} of "
+            f"{len(combos)} (cut list, assignment) combinations; the "
+            f"returned plans are NOT the full sweep — narrow cut_pool/"
+            f"cut_counts or raise max_evals", stacklevel=2)
+        combos = combos[:max_evals]
+
+    plans = []
+    for assign, cuts in combos:
+        idx = (0,) + assign
+        last = assign[-1]
+        path = NetworkPath(full_path.hops[:last])
+        bounds = (0,) + tuple(c + 1 for c in cuts) + (len(rows),)
+        stage_s = [0.0] * (last + 1)
+        for j, t in enumerate(idx):
+            f = float(prefix[bounds[j + 1]] - prefix[bounds[j]])
+            stage_s[t] = platforms[t].compute_time(f)
+        hop_bytes = [0] * last
+        for j in range(len(cuts)):
+            for link in range(idx[j], idx[j + 1]):
+                hop_bytes[link] = payload(cuts[j])
+        pipe = simulate_pipeline(stage_s, hop_bytes, path, n_micro=n_micro)
+        # microbatching is a choice: where packetisation overhead beats
+        # the overlap, the plan ships unchopped (n_micro 1)
+        n_eff, lat = n_micro, pipe.latency_s
+        if pipe.sequential_s < lat:
+            n_eff, lat = 1, pipe.sequential_s
+        proxy = (min(float(cs_curve[pos[c]]) for c in cuts)
+                 if cs_curve is not None else 0.0)
+        plans.append(TierPlan(
+            cuts, tuple(topology[t].name for t in idx), idx,
+            lat, pipe.sequential_s, n_eff,
+            tuple(stage_s), tuple(hop_bytes), proxy))
+    return sorted(plans, key=lambda p: (p.latency_s, -p.accuracy_proxy))
+
+
+def suggest_tier_plan(plans: Sequence[TierPlan],
+                      qos: QoSRequirements) -> Optional[TierPlan]:
+    """The best QoS-feasible tier plan: max accuracy proxy, then min
+    pipelined latency (None when nothing in ``plans`` satisfies)."""
+    ok = [p for p in plans if p.satisfies(qos)]
+    if not ok:
+        return None
+    return max(ok, key=lambda p: (p.accuracy_proxy, -p.latency_s))
 
 
 @dataclass(frozen=True)
@@ -91,8 +300,16 @@ class DeploymentPlanner:
                  lc_model=None, lc_params=None,
                  server_platform=PLATFORMS["server-gpu"],
                  input_bytes: Optional[int] = None, n_frames: int = 8,
-                 cost=None, cost_source: str = "analytic", calibration=None,
-                 sample=None):
+                 cost=None, cost_source: Optional[str] = None,
+                 calibration=None, sample=None):
+        if cost_source is not None or calibration is not None:
+            warnings.warn(
+                "DeploymentPlanner(cost_source=..., calibration=...) is "
+                "deprecated; pass cost=... (any repro.api.types.CostModel "
+                "— cost=table replaces cost_source='measured', "
+                "calibration=table)", DeprecationWarning, stacklevel=2)
+        if cost_source is None:
+            cost_source = "analytic"
         if accuracy_fn is None and eval_data is None:
             raise ValueError("need eval_data to measure accuracy "
                              "(or pass accuracy_fn)")
@@ -201,6 +418,17 @@ class DeploymentPlanner:
                     sample=self.sample)
             self._cost_cache[split] = cost
         return self._cost_cache[split]
+
+    # ------------------------------------------------------- multi-tier ----
+    def search_tiers(self, topology: TierTopology, *, n_micro: int = 4,
+                     **kw) -> list:
+        """Multi-tier search over ``topology``: cut-list x stage->tier
+        assignment, priced sequentially and pipelined — the planner-bound
+        spelling of :func:`plan_tiers` (CS curve, compression and sample
+        wired from this planner's configuration)."""
+        return plan_tiers(self.model, self.params, topology,
+                          n_micro=n_micro, cs_curve=self.cs_curve,
+                          layer_idx=self.layer_idx, sample=self.sample, **kw)
 
     def default_space(self) -> SearchSpace:
         """Every legal cut the CS curve covers, stock protocol/batch/replica

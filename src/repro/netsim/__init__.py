@@ -1,4 +1,5 @@
 """Communication-aware discrete-event simulation (paper §IV)."""
-from .channel import Channel, INTERFACES            # noqa: F401
+from .channel import Channel, INTERFACES, compose_channels  # noqa: F401
 from .protocols import simulate_transfer            # noqa: F401
-from .simulator import ApplicationSimulator, NetworkConfig  # noqa: F401
+from .simulator import (ApplicationSimulator, NetworkConfig,  # noqa: F401
+                        NetworkPath, PipelineResult, simulate_pipeline)

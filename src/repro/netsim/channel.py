@@ -29,6 +29,27 @@ class Channel:
         return rng.random(n) < self.loss_rate
 
 
+def compose_channels(channels) -> Channel:
+    """The effective single channel of a multi-link store-and-forward
+    segment: latencies add, bandwidth is the bottleneck link, loss
+    compounds (``1 - prod(1 - p)``).  Used when a logical wire hop of a
+    tier plan traverses several physical links (a skipped tier forwards
+    without computing) but the consumer prices one transfer per hop.
+    """
+    channels = list(channels)
+    if not channels:
+        raise ValueError("compose_channels needs at least one channel")
+    if len(channels) == 1:
+        return channels[0]
+    loss = 1.0
+    for ch in channels:
+        loss *= 1.0 - ch.loss_rate
+    return Channel(sum(ch.latency_s for ch in channels),
+                   min(ch.capacity_bps for ch in channels),
+                   min(ch.interface_bps for ch in channels),
+                   loss_rate=1.0 - loss, seed=channels[0].seed)
+
+
 # Interface presets from the paper (§IV): Gigabit, Fast-Ethernet, Wi-Fi.
 INTERFACES = {
     "gigabit": 1000e6,

@@ -11,7 +11,9 @@ real, not modelled.
 """
 from __future__ import annotations
 
+import math
 import warnings
+from collections import deque
 from dataclasses import dataclass
 
 import jax
@@ -20,8 +22,10 @@ import numpy as np
 
 from repro.core import bottleneck as B
 from repro.core.qos import Candidate, SimVerdict
-from repro.core.scenarios import Scenario, scenario_times_and_payload
+from repro.core.scenarios import (Scenario, scenario_times_and_payload,
+                                  stage_times_and_payloads)
 from .channel import Channel
+from .events import EventQueue
 from .protocols import MTU_BYTES, simulate_transfer
 
 
@@ -30,6 +34,46 @@ class NetworkConfig:
     protocol: str                  # 'tcp' | 'udp'
     channel: Channel
     mtu: int = MTU_BYTES
+
+
+@dataclass(frozen=True)
+class NetworkPath:
+    """An ordered chain of wire hops (device -> edge -> ... -> cloud).
+
+    The multi-tier counterpart of :class:`NetworkConfig`: hop k connects
+    tier k to tier k+1 and carries the activation after cut k of a
+    K-cut plan.  Hops may be given as ``NetworkConfig`` or bare
+    ``Channel`` (priced over ``default_protocol``).
+    """
+    hops: tuple
+    default_protocol: str = "tcp"
+
+    def __post_init__(self):
+        norm = tuple(h if isinstance(h, NetworkConfig)
+                     else NetworkConfig(self.default_protocol, h)
+                     for h in self.hops)
+        object.__setattr__(self, "hops", norm)
+
+    def __len__(self):
+        return len(self.hops)
+
+    def __iter__(self):
+        return iter(self.hops)
+
+    def __getitem__(self, k) -> NetworkConfig:
+        return self.hops[k]
+
+    def channels(self) -> list:
+        return [h.channel for h in self.hops]
+
+
+def as_path(net, protocol: str = "tcp") -> NetworkPath:
+    """Coerce a NetworkPath / NetworkConfig / Channel / hop sequence."""
+    if isinstance(net, NetworkPath):
+        return net
+    if isinstance(net, (NetworkConfig, Channel)):
+        return NetworkPath((net,), default_protocol=protocol)
+    return NetworkPath(tuple(net), default_protocol=protocol)
 
 
 class _LegacyCalibration:
@@ -66,10 +110,120 @@ class _LegacyCalibration:
         return BatchCostModel.from_measured(per_item, platform.flops_per_s)
 
 
-def measure_flow(scenario: Scenario, netcfg: NetworkConfig, model, params,
+# ------------------------------------------------- pipelined microbatching ----
+@dataclass
+class PipelineResult:
+    """Makespan of one sample through a K-hop stage chain, microbatched.
+
+    ``latency_s`` is the pipelined makespan (last microbatch leaves the
+    last stage); ``sequential_s`` is the no-overlap reference (sum of
+    stage times + one full-payload transfer per hop).  The speedup comes
+    from hop-k transfer overlapping stage-k+1 compute (and the other
+    hops) across microbatches, GPipe-style.
+    """
+    latency_s: float
+    sequential_s: float
+    n_micro: int
+    stage_s: tuple                   # full-sample stage times the sim used
+    hop_bytes: tuple
+    micro_done_s: tuple              # per-microbatch exit times
+
+    @property
+    def speedup(self) -> float:
+        return self.sequential_s / self.latency_s if self.latency_s else 1.0
+
+
+def simulate_pipeline(stage_s, hop_bytes, path, *, n_micro: int = 4,
+                      stream: int = 0) -> PipelineResult:
+    """Event-driven microbatched execution of a multi-tier split sample.
+
+    The sample is chopped into ``n_micro`` microbatches; each tier and
+    each link is a serial resource (one microbatch at a time, FIFO), so
+    hop-k transfer of microbatch m overlaps stage-k+1 compute of
+    microbatch m-1 — scheduled on the shared discrete-event engine
+    (``netsim.events.EventQueue``), per-microbatch transfer durations
+    priced by the transport models on ``ceil(bytes / n_micro)`` payloads.
+
+    ``stage_s``: K+1 full-sample stage compute times (zero entries model
+    pass-through tiers); ``hop_bytes``: K full-sample payloads; ``path``:
+    the K-hop :class:`NetworkPath`.
+    """
+    path = as_path(path)
+    K = len(path)
+    if len(stage_s) != K + 1 or len(hop_bytes) != K:
+        raise ValueError(f"{K}-hop path needs {K + 1} stage times and {K} "
+                         f"payloads, got {len(stage_s)}/{len(hop_bytes)}")
+    if n_micro < 1:
+        raise ValueError(f"n_micro must be >= 1, got {n_micro}")
+    mb_stage = [s / n_micro for s in stage_s]
+    mb_dur = [[simulate_transfer(cfg.protocol,
+                                 max(1, math.ceil(b / n_micro)),
+                                 cfg.channel, mtu=cfg.mtu,
+                                 stream=stream * 977 + 97 * k + m).duration_s
+               for m in range(n_micro)]
+              for k, (cfg, b) in enumerate(zip(path, hop_bytes))]
+
+    q = EventQueue()
+    tier_busy = [False] * (K + 1)
+    tier_q = [deque() for _ in range(K + 1)]
+    link_busy = [False] * K
+    link_q = [deque() for _ in range(K)]
+    done = {}
+
+    def maybe_compute(k):
+        if tier_busy[k] or not tier_q[k]:
+            return
+        m = tier_q[k].popleft()
+        tier_busy[k] = True
+        q.schedule(q.now + mb_stage[k], lambda: stage_done(k, m))
+
+    def stage_done(k, m):
+        tier_busy[k] = False
+        if k == K:
+            done[m] = q.now
+        else:
+            link_q[k].append(m)
+            maybe_send(k)
+        maybe_compute(k)
+
+    def maybe_send(k):
+        if link_busy[k] or not link_q[k]:
+            return
+        m = link_q[k].popleft()
+        link_busy[k] = True
+        dur = mb_dur[k][m]
+        # the link is busy for the sender-clocked part of the transfer;
+        # the last bit then propagates for one channel latency while the
+        # next microbatch may already be serialising behind it
+        busy = max(dur - path[k].channel.latency_s, 0.0)
+
+        def freed(k=k):
+            link_busy[k] = False
+            maybe_send(k)
+
+        def delivered(k=k, m=m):
+            tier_q[k + 1].append(m)
+            maybe_compute(k + 1)
+        q.schedule(q.now + busy, freed)
+        q.schedule(q.now + dur, delivered)
+
+    for m in range(n_micro):
+        tier_q[0].append(m)
+    maybe_compute(0)
+    q.run()
+    sequential = sum(stage_s) + sum(
+        simulate_transfer(cfg.protocol, b, cfg.channel, mtu=cfg.mtu,
+                          stream=stream * 977 + 97 * k).duration_s
+        for k, (cfg, b) in enumerate(zip(path, hop_bytes)))
+    return PipelineResult(max(done.values()), sequential, n_micro,
+                          tuple(stage_s), tuple(hop_bytes),
+                          tuple(done[m] for m in range(n_micro)))
+
+
+def measure_flow(scenario: Scenario, netcfg, model, params,
                  input_bytes: int, n_frames: int = 8, *,
                  cost=None, calibration=None, batch: int = 1,
-                 sample=None) -> dict:
+                 sample=None, tiers=None, n_micro=None) -> dict:
     """Per-flow latency decomposition of one scenario over one network.
 
     Returns ``edge_s``/``server_s`` compute times, the wire payload, and
@@ -77,6 +231,21 @@ def measure_flow(scenario: Scenario, netcfg: NetworkConfig, model, params,
     ``ApplicationSimulator.simulate`` consumes this for single-link runs;
     ``repro.fleet.planner`` consumes it to cost whole deployments without
     re-deriving the timing model.
+
+    ``netcfg`` may also be a :class:`NetworkPath` (or hop sequence): a
+    K-cut SC plan is then priced hop by hop — stage k's compute on tier
+    k (``tiers``: the K+1 platform chain; default: the scenario's edge
+    followed by its server for every later stage), hop k's transfer over
+    path entry k.  The returned dict adds per-stage keys (``stage_s``,
+    ``hop_bytes``, ``hop_frames``, ``hop_wire_s``) while keeping the flat
+    2-tier aggregates (``edge_s`` = stage 0, ``server_s`` = later stages,
+    ``wire_s[f]`` = frame f's whole-path transfer), so
+    :func:`flow_latency_s` reads as the *sequential* multi-hop latency.
+    With ``n_micro``, the pipelined-microbatch makespan is added as
+    ``pipeline`` / ``pipeline_s`` — hop-k transfer overlapping stage-k+1
+    compute (:func:`simulate_pipeline`), the multi-tier speed win.
+    Multi-hop flows are priced analytically (``cost`` sources only cover
+    the 2-tier cells).
 
     ``cost``: any :class:`repro.api.types.CostModel` — a
     ``runtime.calibrate.CalibrationTable`` (measured), an
@@ -100,6 +269,19 @@ def measure_flow(scenario: Scenario, netcfg: NetworkConfig, model, params,
                       DeprecationWarning, stacklevel=2)
         if cost is None:
             cost = _LegacyCalibration(calibration)
+    plan = scenario.split_plan
+    n_cuts = len(getattr(plan, "splits", ()) or ())
+    if (isinstance(netcfg, NetworkPath) or n_cuts > 1
+            or not isinstance(netcfg, NetworkConfig)):
+        if cost is not None:
+            warnings.warn(
+                "cost sources only price 2-tier cells; this multi-hop "
+                "path flow is priced analytically and cost= is ignored",
+                stacklevel=2)
+        return _measure_path_flow(scenario, as_path(netcfg), model, params,
+                                  input_bytes, n_frames, batch=batch,
+                                  sample=sample, tiers=tiers,
+                                  n_micro=n_micro)
     times = None
     if cost is not None:
         split = getattr(scenario.split_plan, "split_layer", None)
@@ -116,6 +298,58 @@ def measure_flow(scenario: Scenario, netcfg: NetworkConfig, model, params,
                   for f in range(n_frames)]
     return {**times, "frames": frames,
             "wire_s": [t.duration_s for t in frames]}
+
+
+def _measure_path_flow(scenario: Scenario, path: NetworkPath, model, params,
+                       input_bytes: int, n_frames: int, *, batch: int,
+                       sample=None, tiers=None, n_micro=None) -> dict:
+    """Multi-hop pricing behind :func:`measure_flow` (SC and RC flows)."""
+    plan = scenario.split_plan
+    if scenario.kind == "SC":
+        cuts = plan.splits
+        if len(path) != len(cuts):
+            raise ValueError(
+                f"{len(cuts)}-cut plan needs a {len(cuts)}-hop path, got "
+                f"{len(path)} hops (pass one NetworkConfig per hop)")
+        if tiers is None:
+            tiers = (scenario.edge,) + (scenario.server,) * len(cuts)
+        st = stage_times_and_payloads(model, params, plan, tiers, batch,
+                                      sample=sample)
+        stage_s, hop_bytes = st["stage_s"], st["hop_bytes"]
+    elif scenario.kind == "RC":
+        # the raw input traverses the whole path; the last tier computes
+        from repro.core.stats import total_flops
+        from repro.core.scenarios import _sample_scale
+        flops = (total_flops(model, params, batch, sample=sample)
+                 * _sample_scale(batch, sample))
+        server = (tiers[-1] if tiers else scenario.server)
+        stage_s = [0.0] * len(path) + [server.compute_time(flops)]
+        hop_bytes = [input_bytes] * len(path)   # 2-tier RC convention
+    else:                            # LC never touches the network
+        from repro.core.stats import total_flops
+        from repro.core.scenarios import _sample_scale
+        flops = (total_flops(model, params, batch, sample=sample)
+                 * _sample_scale(batch, sample))
+        edge = (tiers[0] if tiers else scenario.edge)
+        stage_s, hop_bytes, path = [edge.compute_time(flops)], [], as_path(())
+    hop_frames = [[simulate_transfer(cfg.protocol, b, cfg.channel,
+                                     stream=f * 131 + k, mtu=cfg.mtu)
+                   for f in range(n_frames)]
+                  for k, (cfg, b) in enumerate(zip(path, hop_bytes))]
+    wire_s = [sum(hop_frames[k][f].duration_s for k in range(len(path)))
+              for f in range(n_frames)]
+    flow = {"edge_s": stage_s[0], "server_s": sum(stage_s[1:]),
+            "wire_bytes": sum(hop_bytes), "cost_source": "analytic",
+            "stage_s": list(stage_s), "hop_bytes": list(hop_bytes),
+            "hop_frames": hop_frames,
+            "hop_wire_s": [[t.duration_s for t in hf] for hf in hop_frames],
+            "frames": hop_frames[0] if hop_frames else [],
+            "wire_s": wire_s}
+    if n_micro is not None:
+        pipe = simulate_pipeline(stage_s, hop_bytes, path, n_micro=n_micro)
+        flow["pipeline"] = pipe
+        flow["pipeline_s"] = pipe.latency_s
+    return flow
 
 
 def flow_latency_s(flow: dict) -> float:

@@ -53,9 +53,16 @@ def timeit_blocked(fn, *args, iters: int = 3, warmup: int = 1) -> tuple:
 
 @dataclass
 class RuntimeResult:
-    """One timed end-to-end split inference."""
+    """One timed end-to-end split inference.
+
+    The scalar fields keep the historical 1-cut decomposition for any
+    number of cuts: ``head_s`` is stage 0, ``tail_s`` sums the later
+    stages, and ``encode_s``/``transfer_s``/``decode_s``/``wire_bytes``
+    sum over hops.  The per-stage / per-hop breakdown lives in
+    ``stage_s`` and ``hops``.
+    """
     logits: np.ndarray
-    split_layer: int
+    split_layer: int                 # first (edge-side) cut
     head_s: float
     encode_s: float
     transfer_s: float                # netsim-priced wire time (0 w/o channel)
@@ -63,6 +70,9 @@ class RuntimeResult:
     tail_s: float
     wire_bytes: int
     meta: dict = field(default_factory=dict)
+    splits: tuple = ()               # full ordered cut list
+    stage_s: tuple = ()              # per-stage compute seconds (K+1)
+    hops: tuple = ()                 # per-hop dicts: bytes/encode_s/...
 
     @property
     def compute_s(self) -> float:
@@ -74,48 +84,93 @@ class RuntimeResult:
 
 
 class SplitRuntime:
-    """Execute a model split at ``split_layer`` end-to-end on this host.
+    """Execute a model split at ``split_layer`` (one cut or an ordered
+    cut list) end-to-end on this host.
 
-    ``channel``/``protocol`` price the wire hop with the discrete-event
-    transport models (the bytes are real, the network is simulated — the
-    runtime runs in one process).  ``wire_kind``: 'ae8' when an AE is
-    given, else 'int8' ('f32' for the exactness oracle).
+    The stages run as a chain: stage k computes, its boundary activation
+    crosses hop k through the wire codec, stage k+1 continues — with
+    per-stage and per-hop wall-clock timing.  ``channel``/``protocol``
+    price the wire hops with the discrete-event transport models (the
+    bytes are real, the network is simulated — the runtime runs in one
+    process); a single channel prices every hop, a sequence of channels
+    (or a ``netsim.simulator.NetworkPath``) prices hop k with entry k.
+    ``wire_kind`` per hop: 'ae8' when that cut has an AE, else 'int8'
+    ('f32' for the exactness oracle).  ``ae`` may be one AE dict (first
+    cut) or a ``{cut: ae}`` map.
     """
 
-    def __init__(self, model, params, split_layer: int, *,
+    def __init__(self, model, params, split_layer, *,
                  ae: Optional[dict] = None,
-                 channel: Optional[Channel] = None, protocol: str = "tcp",
+                 channel=None, protocol: str = "tcp",
                  quantize: bool = True, backend: Optional[str] = None):
         self.part: Partition = make_partition(model, params, split_layer, ae)
         self.channel, self.protocol = channel, protocol
         self.quantize, self.backend = quantize, backend
+        self.hops = self._resolve_hops(channel, protocol)
+
+    def _resolve_hops(self, channel, protocol) -> list:
+        """Per-hop (protocol, channel) pairs; None entries skip pricing."""
+        n = len(self.part.splits)
+        if channel is None:
+            return [None] * n
+        if isinstance(channel, Channel):
+            return [(protocol, channel)] * n
+        hops = []
+        for h in channel:                    # NetworkPath | sequence
+            if isinstance(h, Channel):
+                hops.append((protocol, h))
+            elif h is None:
+                hops.append(None)
+            else:                            # a NetworkConfig-shaped hop
+                hops.append((h.protocol, h.channel))
+        if len(hops) != n:
+            raise ValueError(f"{n} cuts need {n} priced hops, got {len(hops)}")
+        return hops
 
     # ------------------------------------------------------------ stages ----
-    def _encode(self, f):
-        return W.encode_activation(f, self.part.ae, quantize=self.quantize,
+    def _encode(self, f, ae):
+        return W.encode_activation(f, ae, quantize=self.quantize,
                                    backend=self.backend)
 
     def infer(self, x, *, iters: int = 3, stream: int = 0) -> RuntimeResult:
-        """Timed head -> wire -> tail execution of one input batch."""
-        x = jnp.asarray(x)
-        head_s, f = timeit_blocked(self.part.head, x, iters=iters)
-        encode_s, buf = timeit_blocked(
-            lambda v: W.to_bytes(self._encode(v)), f, iters=iters)
-        transfer_s, meta = 0.0, {}
-        if self.channel is not None:
-            tr = simulate_transfer(self.protocol, len(buf), self.channel,
-                                   stream=stream)
-            transfer_s = tr.duration_s
-            meta = {"n_packets": tr.n_packets,
-                    "n_transmissions": tr.n_transmissions,
-                    "loss_fraction": tr.loss_fraction}
-        decode_s, f_hat = timeit_blocked(
-            lambda b: W.decode_activation(W.from_bytes(b), self.part.ae),
-            buf, iters=iters)
-        tail_s, logits = timeit_blocked(self.part.tail, f_hat, iters=iters)
-        return RuntimeResult(np.asarray(logits), self.part.split_layer,
-                             head_s, encode_s, transfer_s, decode_s, tail_s,
-                             len(buf), meta)
+        """Timed stage -> wire -> stage ... execution of one input batch."""
+        cur = jnp.asarray(x)
+        stage_s, hops = [], []
+        for k in range(self.part.n_stages):
+            s, cur = timeit_blocked(self.part.stage(k), cur, iters=iters)
+            stage_s.append(s)
+            if k >= len(self.part.splits):
+                break
+            ae_k = self.part.ae_map.get(self.part.splits[k])
+            encode_s, buf = timeit_blocked(
+                lambda v: W.to_bytes(self._encode(v, ae_k)), cur, iters=iters)
+            transfer_s, meta = 0.0, {}
+            if self.hops[k] is not None:
+                proto, ch = self.hops[k]
+                tr = simulate_transfer(proto, len(buf), ch,
+                                       stream=stream + 137 * k)
+                transfer_s = tr.duration_s
+                meta = {"n_packets": tr.n_packets,
+                        "n_transmissions": tr.n_transmissions,
+                        "loss_fraction": tr.loss_fraction}
+            decode_s, cur = timeit_blocked(
+                lambda b: W.decode_activation(W.from_bytes(b), ae_k),
+                buf, iters=iters)
+            hops.append({"cut": self.part.splits[k], "bytes": len(buf),
+                         "encode_s": encode_s, "transfer_s": transfer_s,
+                         "decode_s": decode_s, **meta})
+        logits = cur
+        return RuntimeResult(
+            np.asarray(logits), self.part.split_layer,
+            stage_s[0],
+            sum(h["encode_s"] for h in hops),
+            sum(h["transfer_s"] for h in hops),
+            sum(h["decode_s"] for h in hops),
+            sum(stage_s[1:]),
+            sum(h["bytes"] for h in hops),
+            dict(hops[0]) if len(hops) == 1 else {"hops": hops},
+            splits=self.part.splits, stage_s=tuple(stage_s),
+            hops=tuple(hops))
 
     def reference(self, x) -> np.ndarray:
         """Unsplit forward of the same params (equivalence oracle)."""

@@ -1,12 +1,18 @@
-"""Executable head/tail partition of a :class:`LayeredModel` at a legal cut.
+"""Executable stage chain of a :class:`LayeredModel` at a legal cut list.
 
 This is the *live* counterpart of ``core.split``: where ``SplitPlan`` only
-names a design point, a :class:`Partition` is a pair of jitted callables
-that actually run the two sides — the head on the "edge" process, the tail
-on the "server" process — with the activation crossing between them through
-the wire codec (``runtime.wire``).  Legality goes through
-``core.split.validate_cut`` so the runtime and the planner can never
-disagree about which cuts exist.
+names a design point, a :class:`Partition` is a chain of K+1 jitted
+callables that actually run the stages — the first on the "device"
+process, the middle stages on intermediate tiers, the last on the
+"server" process — with each inter-stage activation crossing between them
+through the wire codec (``runtime.wire``).  Legality goes through
+``core.split.validate_cuts`` so the runtime and the planner can never
+disagree about which cut lists exist.
+
+The historical 1-cut head/tail vocabulary is preserved exactly:
+``head`` is stage 0 (layers ``[0, splits[0]]``) and ``tail`` is
+everything after the first cut, so ``tail(head(x)) == apply(x)`` for any
+number of cuts.
 """
 from __future__ import annotations
 
@@ -16,62 +22,106 @@ from typing import Optional
 import jax
 
 from repro.core import bottleneck as B
-from repro.core.split import validate_cut
+from repro.core.split import validate_cuts
 from repro.models.layered import LayeredModel
+
+
+def _is_single_ae(ae: dict) -> bool:
+    """One bottleneck AE ({'enc': .., 'dec': ..}) vs a cut -> AE map."""
+    return "enc" in ae and "dec" in ae
 
 
 @dataclass
 class Partition:
-    """Head/tail executables for a cut after ``split_layer``.
+    """Stage executables for an ordered cut list.
 
-    ``head(x)`` runs layers ``[0, split]`` and returns the raw boundary
-    activation; ``tail(f)`` runs layers ``(split, end)`` and returns the
-    logits.  The bottleneck AE (when present) lives in the wire codec, not
-    here — the partition is codec-agnostic so the same head/tail pair can
-    ship f32, int8 or AE-compressed payloads.
+    ``split_layer`` accepts the historical scalar cut or a cut sequence;
+    the normalised tuple lives in :attr:`splits` and the scalar field is
+    rebound to the first (edge-side) cut.  ``stage(k)(x)`` runs stage k;
+    ``head``/``tail`` keep the 1-cut vocabulary (stage 0 / everything
+    after the first cut).  The bottleneck AEs (when present) live in the
+    wire codec, not here — the partition is codec-agnostic so the same
+    stage chain can ship f32, int8 or AE-compressed payloads.  ``ae`` may
+    be a single AE dict (attached to the first cut) or a ``{cut: ae}``
+    map; :attr:`ae_map` is the normalised form.
     """
     model: LayeredModel
     params: list
-    split_layer: int
+    split_layer: object              # int | ordered cut sequence
     ae: Optional[dict] = None
-    _head: object = field(default=None, repr=False)
+    _stages: list = field(default=None, repr=False)
     _tail: object = field(default=None, repr=False)
 
     def __post_init__(self):
-        validate_cut(self.model, self.split_layer)
-        m, p, k = self.model, self.params, self.split_layer
-        self._head = jax.jit(lambda x: m.apply_range(p, x, 0, k + 1))
-        self._tail = jax.jit(
-            lambda f: m.apply_range(p, f, k + 1, len(m.layers)))
+        self.splits = validate_cuts(self.model, self.split_layer)
+        self.split_layer = self.splits[0]
+        if self.ae is None:
+            self.ae_map = {}
+        elif _is_single_ae(self.ae):
+            self.ae_map = {self.splits[0]: self.ae}
+        else:
+            self.ae_map = dict(self.ae)
+            self.ae = self.ae_map.get(self.splits[0])
+        m, p = self.model, self.params
+        bounds = (0,) + tuple(c + 1 for c in self.splits) + (len(m.layers),)
+        self._stages = [
+            jax.jit(lambda x, a=a, b=b: m.apply_range(p, x, a, b))
+            for a, b in zip(bounds, bounds[1:])]
+        self._tail = (self._stages[1] if len(self.splits) == 1 else
+                      jax.jit(lambda f: m.apply_range(p, f, self.splits[0] + 1,
+                                                      len(m.layers))))
 
     # ------------------------------------------------------------ stages ----
+    @property
+    def n_stages(self) -> int:
+        return len(self.splits) + 1
+
+    def stage(self, k: int):
+        """The jitted stage-k callable (layers between cuts k-1 and k)."""
+        return self._stages[k]
+
     def head(self, x: jax.Array) -> jax.Array:
-        """Edge side: layers [0, split] -> boundary activation."""
-        return self._head(x)
+        """Device side: layers [0, splits[0]] -> first boundary activation."""
+        return self._stages[0](x)
 
     def tail(self, f: jax.Array) -> jax.Array:
-        """Server side: boundary activation -> logits."""
+        """Everything after the first cut: boundary activation -> logits."""
         return self._tail(f)
 
     def full(self, x: jax.Array) -> jax.Array:
         """Unsplit reference forward (equivalence oracle)."""
         return self.tail(self.head(x))
 
+    def forward_stages(self, x: jax.Array) -> jax.Array:
+        """Run the whole stage chain sequentially (no codec) — equal to
+        :meth:`full` by construction; the multi-stage equivalence oracle."""
+        for s in self._stages:
+            x = s(x)
+        return x
+
     # ------------------------------------------------------------ shapes ----
-    def boundary_shape(self, batch: int = 1) -> tuple:
-        """Activation shape crossing the wire (with batch dim)."""
+    def boundary_shape(self, batch: int = 1, hop: int = 0) -> tuple:
+        """Activation shape crossing wire hop ``hop`` (with batch dim)."""
         return tuple(self.model.activation_shapes(
-            self.params, batch)[self.split_layer])
+            self.params, batch)[self.splits[hop]])
 
     def describe(self) -> str:
-        return (f"{self.model.name}: head=[0..{self.split_layer}] "
-                f"tail=[{self.split_layer + 1}..{len(self.model.layers) - 1}]"
-                f"{' +ae' if self.ae is not None else ''}")
+        m = self.model
+        if len(self.splits) == 1:
+            return (f"{m.name}: head=[0..{self.split_layer}] "
+                    f"tail=[{self.split_layer + 1}..{len(m.layers) - 1}]"
+                    f"{' +ae' if self.ae is not None else ''}")
+        bounds = (0,) + tuple(c + 1 for c in self.splits) + (len(m.layers),)
+        stages = " | ".join(f"stage{i}=[{a}..{b - 1}]"
+                            for i, (a, b) in enumerate(zip(bounds, bounds[1:])))
+        aes = sorted(self.ae_map)
+        return f"{m.name}: {stages}{' +ae@' + str(aes) if aes else ''}"
 
 
-def make_partition(model: LayeredModel, params, split_layer: int,
+def make_partition(model: LayeredModel, params, split_layer,
                    ae: Optional[dict] = None) -> Partition:
-    """Build (and legality-check) a runnable partition."""
+    """Build (and legality-check) a runnable partition at one cut (int)
+    or an ordered cut list (sequence)."""
     return Partition(model, params, split_layer, ae)
 
 

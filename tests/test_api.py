@@ -192,6 +192,79 @@ def test_cost_stack_prefers_first_source(vgg_small):
     assert stack.server_cost(split, analytic.server).flops_per_item > 0
 
 
+def test_split_candidate_hash_consistent_with_eq():
+    """Regression: identity is the design point, so candidates differing
+    only in annotations dedupe in sets/dicts (and equality stays
+    transitive with the tuple form)."""
+    a, b = SplitCandidate.sc(4, accuracy_proxy=0.9), SplitCandidate.sc(4, 0.1)
+    assert a == b and hash(a) == hash(b)
+    assert a == ("SC@4", 4) and b == ("SC@4", 4)    # transitivity closes
+    assert len({a, b}) == 1
+    assert len({a, ("SC@4", 4)}) == 1
+    assert {a: "x"}[("SC@4", 4)] == "x"             # tuple-keyed lookup
+    assert SplitCandidate.sc(4) != SplitCandidate.sc(5)
+    assert SplitCandidate.rc() != SplitCandidate.lc()
+    # multi-cut candidates hash/dedupe the same way
+    m1, m2 = SplitCandidate.sc((2, 5), 0.8), SplitCandidate.sc((2, 5), 0.2)
+    assert m1 == m2 and len({m1, m2}) == 1
+    assert m1 != SplitCandidate.sc((2, 6))
+    assert m1 != SplitCandidate.sc(2)
+
+
+def test_split_candidate_multicut_forms():
+    c = SplitCandidate.sc((3, 7, 11))
+    assert c.label == "SC@3+7+11" and c.splits == (3, 7, 11)
+    assert c.split_layer == 3                       # scalar = first cut
+    assert c.kind == "SC"
+    assert SplitCandidate.from_any("SC@3+7+11") == c
+    assert SplitCandidate.from_any((3, 7, 11)) == c
+    assert SplitCandidate.from_any(c.plan()) == c
+    plan = c.plan()
+    assert plan.splits == (3, 7, 11) and plan.n_stages == 4
+    # the 1-cut shape is untouched
+    one = SplitCandidate.sc(3)
+    assert one.label == "SC@3" and one.splits == (3,)
+    assert tuple(one) == ("SC@3", 3)
+
+
+def test_planner_deprecated_cost_source_warns(vgg_small):
+    """The cost_source=/calibration= shim must say it is deprecated."""
+    from repro.fleet.planner import DeploymentPlanner
+    from repro.runtime.calibrate import calibrate
+    model, params = vgg_small
+    split = model.cut_points()[1]
+    table = calibrate(model, params, [split], batch=1, iters=1)
+    cuts = model.cut_points()
+    kw = dict(cs_curve=np.linspace(1.0, 0.3, len(cuts)), layer_idx=cuts,
+              accuracy_fn=lambda s, n: 0.9, input_bytes=3072)
+    with pytest.warns(DeprecationWarning, match="deprecated"):
+        planner = DeploymentPlanner(model, params, cost_source="measured",
+                                    calibration=table, **kw)
+    assert planner.cost is not None
+    with pytest.warns(DeprecationWarning, match="deprecated"):
+        DeploymentPlanner(model, params, cost_source="analytic", **kw)
+    # the repro.api spelling stays silent
+    import warnings as _w
+    with _w.catch_warnings():
+        _w.simplefilter("error", DeprecationWarning)
+        DeploymentPlanner(model, params, cost=table, **kw)
+
+
+def test_measure_flow_deprecated_calibration_warns(vgg_small):
+    from repro.core.scenarios import Scenario
+    from repro.core.split import SplitPlan
+    from repro.netsim.channel import Channel
+    from repro.netsim.simulator import NetworkConfig
+    from repro.runtime.calibrate import calibrate
+    model, params = vgg_small
+    split = model.cut_points()[1]
+    table = calibrate(model, params, [split], batch=1, iters=1)
+    netcfg = NetworkConfig("tcp", Channel(1e-3, 100e6, 100e6, seed=0))
+    with pytest.warns(DeprecationWarning, match="calibration"):
+        measure_flow(Scenario("SC", SplitPlan(split)), netcfg, model,
+                     params, 3072, calibration=table)
+
+
 def test_measure_flow_cost_equals_deprecated_calibration(vgg_small):
     from repro.core.scenarios import Scenario
     from repro.core.split import SplitPlan

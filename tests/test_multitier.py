@@ -1,0 +1,462 @@
+"""N-way multi-tier splits: cut-list legality, the K+1-stage runtime
+chain, multi-hop flow pricing, pipelined microbatching, and the tier
+planner — plus the 1-cut compatibility contract at every seam."""
+import itertools
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.scenarios import PLATFORMS, Scenario
+from repro.core.split import (SplitPlan, hop_payload_bytes, legal_cut_lists,
+                              normalize_cuts, validate_cuts)
+from repro.core.stats import flops_split, flops_stages
+from repro.fleet.planner import (Tier, TierPlan, TierTopology, plan_tiers,
+                                 suggest_tier_plan)
+from repro.netsim.channel import Channel, compose_channels
+from repro.netsim.simulator import (NetworkConfig, NetworkPath,
+                                    flow_latency_s, measure_flow,
+                                    simulate_pipeline)
+from repro.runtime.engine import SplitRuntime
+from repro.runtime.partition import make_partition
+
+
+# ------------------------------------------------------------- legality ----
+def test_normalize_and_validate_cuts(vgg_small):
+    model, _ = vgg_small
+    cuts = model.cut_points()
+    assert normalize_cuts(cuts[0]) == (cuts[0],)
+    assert normalize_cuts([cuts[0], cuts[2]]) == (cuts[0], cuts[2])
+    assert validate_cuts(model, cuts[1]) == (cuts[1],)
+    assert validate_cuts(model, (cuts[0], cuts[3])) == (cuts[0], cuts[3])
+    with pytest.raises(ValueError, match="at least one cut"):
+        validate_cuts(model, ())
+    with pytest.raises(ValueError, match="strictly increasing"):
+        validate_cuts(model, (cuts[2], cuts[2]))
+    with pytest.raises(ValueError, match="strictly increasing"):
+        validate_cuts(model, (cuts[3], cuts[1]))
+    bad = [i for i in range(len(model.layers)) if i not in cuts][0]
+    with pytest.raises(ValueError, match="not legal"):
+        validate_cuts(model, (cuts[0], bad) if bad > cuts[0] else (bad,))
+
+
+def test_normalize_cuts_rejects_shuffled_lists_everywhere():
+    """Monotonicity is enforced at construction, not only at model
+    validation: a shuffled cut list can never become a design point."""
+    from repro.api.types import SplitCandidate
+    with pytest.raises(ValueError, match="strictly increasing"):
+        normalize_cuts((4, 2))
+    with pytest.raises(ValueError, match="strictly increasing"):
+        SplitPlan(None, splits=(5, 2))
+    with pytest.raises(ValueError, match="strictly increasing"):
+        SplitCandidate.from_any((4, 2))
+    with pytest.raises(ValueError, match="strictly increasing"):
+        SplitCandidate.sc((3, 3))
+
+
+def test_legal_cut_lists_are_increasing_combinations(vgg_small):
+    model, _ = vgg_small
+    cuts = model.cut_points()
+    lists = legal_cut_lists(model, 2)
+    assert len(lists) == len(list(itertools.combinations(cuts, 2)))
+    for cl in lists:
+        assert validate_cuts(model, cl) == cl
+    assert legal_cut_lists(model, 1) == [(c,) for c in cuts]
+    with pytest.raises(ValueError):
+        legal_cut_lists(model, 0)
+
+
+def test_flops_stages_partition_total(vgg_small):
+    model, params = vgg_small
+    cuts = model.cut_points()
+    pair = (cuts[1], cuts[4])
+    stages = flops_stages(model, params, pair, batch=2)
+    assert len(stages) == 3 and all(s > 0 for s in stages)
+    head, tail = flops_split(model, params, pair[0], batch=2)
+    assert stages[0] == head and sum(stages[1:]) == tail
+
+
+def test_hop_payload_bytes_matches_single_cut(vgg_small):
+    model, params = vgg_small
+    cuts = model.cut_points()
+    plan2 = SplitPlan(None, splits=(cuts[1], cuts[3]))
+    hops = hop_payload_bytes(model, params, plan2, batch=2)
+    assert len(hops) == 2 and all(b > 0 for b in hops)
+    for i, c in enumerate(plan2.splits):
+        single = hop_payload_bytes(model, params, SplitPlan(c), batch=2)
+        assert hops[i] == single[0]
+
+
+# ----------------------------------------------------- runtime equivalence ----
+def test_every_2cut_pair_matches_unsplit(vgg_small, toy_data):
+    """Acceptance: for every legal 2-cut pair the executed 3-stage
+    SplitRuntime (f32 wire) matches the unsplit model to the 1-cut
+    tolerance."""
+    model, params = vgg_small
+    xs, _ = toy_data
+    x = jnp.asarray(xs[:2])
+    full = np.asarray(model.apply(params, x))
+    for pair in legal_cut_lists(model, 2):
+        rt = SplitRuntime(model, params, pair, quantize=False)
+        res = rt.infer(x, iters=1)
+        np.testing.assert_allclose(res.logits, full, atol=1e-5,
+                                   err_msg=f"cuts={pair}")
+        assert res.splits == pair and len(res.hops) == 2
+        assert res.wire_bytes == sum(h["bytes"] for h in res.hops)
+
+
+def test_three_cut_partition_stage_chain(vgg_small, toy_data):
+    model, params = vgg_small
+    xs, _ = toy_data
+    x = jnp.asarray(xs[:2])
+    cuts = tuple(model.cut_points()[i] for i in (1, 3, 5))
+    part = make_partition(model, params, cuts)
+    assert part.n_stages == 4 and part.split_layer == cuts[0]
+    y = np.asarray(part.forward_stages(x))
+    np.testing.assert_allclose(y, np.asarray(model.apply(params, x)),
+                               atol=1e-5)
+    np.testing.assert_allclose(y, np.asarray(part.full(x)), atol=1e-5)
+    for hop in range(3):
+        shape = part.boundary_shape(batch=2, hop=hop)
+        assert shape == tuple(model.activation_shapes(
+            params, 2)[cuts[hop]])
+    assert "stage2" in part.describe()
+
+
+def test_multicut_runtime_int8_and_per_hop_pricing(vgg_small, toy_data):
+    model, params = vgg_small
+    xs, _ = toy_data
+    x = xs[:2]
+    cuts = (model.cut_points()[1], model.cut_points()[4])
+    hops = [Channel(1e-3, 50e6, 50e6, seed=0), Channel(5e-4, 1e9, 1e9, seed=1)]
+    rt = SplitRuntime(model, params, cuts, channel=hops, quantize=True)
+    res = rt.infer(x, iters=1)
+    ref = rt.reference(x)
+    assert np.argmax(res.logits, -1).tolist() == np.argmax(ref, -1).tolist()
+    assert len(res.hops) == 2 and len(res.stage_s) == 3
+    assert res.transfer_s == sum(h["transfer_s"] for h in res.hops) > 0
+    # the slow first hop must dominate the fast second
+    assert res.hops[0]["transfer_s"] > res.hops[1]["transfer_s"]
+    assert res.head_s == res.stage_s[0]
+    assert res.tail_s == pytest.approx(sum(res.stage_s[1:]))
+    with pytest.raises(ValueError, match="priced hops"):
+        SplitRuntime(model, params, cuts, channel=[hops[0]])
+
+
+# ------------------------------------------------------- multi-hop flows ----
+@pytest.fixture(scope="module")
+def two_hop_path():
+    return NetworkPath((NetworkConfig("tcp", Channel(1e-3, 20e6, 20e6, seed=1)),
+                        NetworkConfig("tcp", Channel(1e-3, 30e6, 30e6, seed=2))))
+
+
+def test_measure_flow_multihop_aggregates(vgg_small, two_hop_path):
+    model, params = vgg_small
+    cuts = (model.cut_points()[1], model.cut_points()[4])
+    sc = Scenario("SC", SplitPlan(None, splits=cuts))
+    flow = measure_flow(sc, two_hop_path, model, params, 3072, n_frames=4,
+                        batch=4)
+    assert len(flow["stage_s"]) == 3 and len(flow["hop_bytes"]) == 2
+    assert flow["edge_s"] == flow["stage_s"][0]
+    assert flow["server_s"] == pytest.approx(sum(flow["stage_s"][1:]))
+    assert flow["wire_bytes"] == sum(flow["hop_bytes"])
+    for f in range(4):
+        assert flow["wire_s"][f] == pytest.approx(
+            flow["hop_wire_s"][0][f] + flow["hop_wire_s"][1][f])
+    assert flow_latency_s(flow) == pytest.approx(
+        flow["edge_s"] + float(np.mean(flow["wire_s"])) + flow["server_s"])
+    # a 2-cut plan over a single link is a configuration error
+    nc = two_hop_path[0]
+    with pytest.raises(ValueError, match="hop"):
+        measure_flow(sc, NetworkPath((nc,)), model, params, 3072)
+
+
+def test_measure_flow_multihop_tiers_price_stages(vgg_small, two_hop_path):
+    model, params = vgg_small
+    cuts = (model.cut_points()[1], model.cut_points()[4])
+    sc = Scenario("SC", SplitPlan(None, splits=cuts))
+    tiers = (PLATFORMS["mcu"], PLATFORMS["edge-accelerator"],
+             PLATFORMS["server-gpu"])
+    flow = measure_flow(sc, two_hop_path, model, params, 3072, n_frames=2,
+                        tiers=tiers)
+    stage_f = flops_stages(model, params, cuts, batch=1)
+    for s, t, f in zip(flow["stage_s"], tiers, stage_f):
+        assert s == pytest.approx(t.compute_time(f))
+
+
+def test_measure_flow_accepts_hop_sequence_for_one_cut(vgg_small):
+    """A bare hop list with a 1-cut plan routes through the path branch
+    (regression: it used to fall into the NetworkConfig-only branch and
+    crash)."""
+    model, params = vgg_small
+    cut = model.cut_points()[2]
+    hop = NetworkConfig("tcp", Channel(1e-3, 50e6, 50e6, seed=0))
+    flow = measure_flow(Scenario("SC", SplitPlan(cut)), [hop], model,
+                        params, 3072, n_frames=2)
+    assert len(flow["stage_s"]) == 2 and len(flow["hop_bytes"]) == 1
+    ref = measure_flow(Scenario("SC", SplitPlan(cut)), hop, model, params,
+                       3072, n_frames=2)
+    assert flow["wire_bytes"] == ref["wire_bytes"]
+    assert flow["edge_s"] == pytest.approx(ref["edge_s"])
+
+
+def test_measure_flow_path_warns_when_cost_is_dropped(vgg_small,
+                                                      two_hop_path):
+    """Multi-hop flows price analytically; silently discarding an
+    explicit cost source would be a trap, so it warns."""
+    from repro.runtime.calibrate import calibrate
+    model, params = vgg_small
+    cuts = (model.cut_points()[1], model.cut_points()[4])
+    table = calibrate(model, params, [cuts[0]], batch=1, iters=1)
+    with pytest.warns(UserWarning, match="cost= is ignored"):
+        flow = measure_flow(Scenario("SC", SplitPlan(None, splits=cuts)),
+                            two_hop_path, model, params, 3072, n_frames=2,
+                            cost=table)
+    assert flow["cost_source"] == "analytic"
+
+
+def test_measure_flow_rc_traverses_whole_path(vgg_small, two_hop_path):
+    model, params = vgg_small
+    flow = measure_flow(Scenario("RC"), two_hop_path, model, params, 3072,
+                        n_frames=2)
+    assert flow["hop_bytes"] == [3072, 3072]
+    assert flow["edge_s"] == 0.0 and flow["server_s"] > 0
+    assert flow["stage_s"][:2] == [0.0, 0.0]
+
+
+# -------------------------------------------------- pipelined microbatching ----
+def test_pipeline_n_micro_1_equals_sequential(two_hop_path):
+    stage_s = [2e-3, 1e-3, 5e-4]
+    pipe = simulate_pipeline(stage_s, [40_000, 20_000], two_hop_path,
+                             n_micro=1)
+    assert pipe.latency_s == pytest.approx(pipe.sequential_s)
+    assert pipe.speedup == pytest.approx(1.0)
+
+
+def test_pipeline_overlap_beats_sequential_when_bandwidth_bound(two_hop_path):
+    """Comparable busy hops + non-trivial compute: overlap must win."""
+    stage_s = [5e-3, 1e-3, 5e-4]
+    pipe = simulate_pipeline(stage_s, [120_000, 60_000], two_hop_path,
+                             n_micro=4)
+    assert pipe.latency_s < pipe.sequential_s
+    assert pipe.speedup > 1.2
+    # makespan can never beat the slowest single resource
+    ser0 = two_hop_path[0].channel.serialization_s(1500) * (120_000 // 1500)
+    assert pipe.latency_s > max(max(stage_s), ser0)
+    assert len(pipe.micro_done_s) == 4
+    assert list(pipe.micro_done_s) == sorted(pipe.micro_done_s)
+
+
+def test_pipeline_shape_validation(two_hop_path):
+    with pytest.raises(ValueError, match="stage times"):
+        simulate_pipeline([1e-3, 1e-3], [1000, 1000], two_hop_path)
+    with pytest.raises(ValueError, match="n_micro"):
+        simulate_pipeline([1e-3, 1e-3, 1e-3], [1000, 1000], two_hop_path,
+                          n_micro=0)
+
+
+def test_measure_flow_pipeline_beats_sequential(vgg_small, two_hop_path):
+    """Acceptance: pipelined microbatching beats sequential multi-hop
+    simulated latency on a bandwidth-bound scenario."""
+    model, params = vgg_small
+    cuts = (model.cut_points()[1], model.cut_points()[4])
+    sc = Scenario("SC", SplitPlan(None, splits=cuts),
+                  edge=PLATFORMS["mcu"])
+    flow = measure_flow(sc, two_hop_path, model, params, 3072, n_frames=2,
+                        batch=32, n_micro=4,
+                        tiers=(PLATFORMS["mcu"], PLATFORMS["edge-embedded"],
+                               PLATFORMS["server-gpu"]))
+    assert flow["pipeline_s"] == flow["pipeline"].latency_s
+    assert flow["pipeline_s"] < flow_latency_s(flow)
+    assert flow["pipeline"].speedup > 1.1
+
+
+# ------------------------------------------------------------ tier planner ----
+@pytest.fixture(scope="module")
+def topology():
+    return TierTopology((
+        Tier("device", "mcu", Channel(1e-3, 20e6, 20e6, seed=1)),
+        Tier("edge", "edge-accelerator", Channel(1e-3, 30e6, 30e6, seed=2)),
+        Tier("cloud", "server-gpu"),
+    ))
+
+
+def test_topology_validation():
+    ch = Channel(1e-3, 20e6, 20e6)
+    with pytest.raises(ValueError, match="at least 2"):
+        TierTopology((Tier("solo", "mcu"),))
+    with pytest.raises(ValueError, match="uplink"):
+        TierTopology((Tier("a", "mcu"), Tier("b", "server-gpu")))
+    with pytest.raises(KeyError, match="unknown platform"):
+        Tier("x", "quantum", ch)
+    topo = TierTopology((Tier("a", "mcu", ch), Tier("b", "server-gpu")))
+    assert len(topo.path()) == 1 and topo.path()[0].channel is ch
+
+
+def test_compose_channels_store_and_forward():
+    a = Channel(1e-3, 20e6, 20e6, loss_rate=0.1, seed=3)
+    b = Channel(2e-3, 100e6, 50e6, loss_rate=0.2, seed=4)
+    c = compose_channels([a, b])
+    assert c.latency_s == pytest.approx(3e-3)
+    assert c.effective_bps == 20e6
+    assert c.loss_rate == pytest.approx(1 - 0.9 * 0.8)
+    assert compose_channels([a]) is a
+    with pytest.raises(ValueError):
+        compose_channels([])
+
+
+def test_plan_tiers_searches_cuts_and_assignments(vgg_small, topology):
+    model, params = vgg_small
+    cuts = model.cut_points()
+    cs = np.linspace(1.0, 0.3, len(cuts))
+    plans = plan_tiers(model, params, topology, n_micro=4, cs_curve=cs,
+                       layer_idx=cuts, batch=8)
+    # 1-cut x 2 assignments + 2-cut x 1 assignment, all legal
+    n1, n2 = len(cuts), len(legal_cut_lists(model, 2))
+    assert len(plans) == 2 * n1 + n2
+    assert all(plans[i].latency_s <= plans[i + 1].latency_s
+               for i in range(len(plans) - 1))
+    for p in plans:
+        validate_cuts(model, p.splits)
+        assert p.stage_tiers[0] == "device" and p.tier_index[0] == 0
+        assert len(p.stage_tiers) == len(p.splits) + 1
+        assert p.sequential_s >= p.latency_s or p.n_micro == 1
+    two = [p for p in plans if len(p.splits) == 2]
+    assert two and all(p.stage_tiers == ("device", "edge", "cloud")
+                       for p in two)
+    # a 2-cut pipelined plan must beat its own sequential schedule
+    assert max(p.speedup for p in two) > 1.0
+
+
+def test_plan_tiers_passthrough_prices_both_links(vgg_small, topology):
+    """A device->cloud 1-cut plan skips the edge tier but still pays
+    both physical links, with the payload on each."""
+    model, params = vgg_small
+    cut = model.cut_points()[2]
+    plans = plan_tiers(model, params, topology, cut_pool=[cut],
+                       cut_counts=[1], batch=4)
+    skip = next(p for p in plans if p.tier_index == (0, 2))
+    assert skip.hop_bytes[0] == skip.hop_bytes[1] > 0
+    assert skip.stage_s[1] == 0.0               # pass-through edge tier
+    rp = skip.runtime_path(topology)
+    assert len(rp) == 1
+    assert rp[0].channel.latency_s == pytest.approx(2e-3)   # composed
+    stop = next(p for p in plans if p.tier_index == (0, 1))
+    assert len(stop.hop_bytes) == 1             # ends at the edge tier
+    assert len(stop.runtime_path(topology)) == 1
+
+
+def test_plan_tiers_batch_scales_with_sample(vgg_small, topology):
+    """With a sample pytree, a requested batch rescales stage times and
+    payloads linearly (same first-order model as stage_times_and_
+    payloads) instead of silently pricing at the sample's own batch."""
+    import jax.numpy as jnp
+    model, params = vgg_small
+    cut = model.cut_points()[2]
+    sample = jnp.zeros((2, 16, 16, 3), jnp.float32)
+    one = plan_tiers(model, params, topology, cut_pool=[cut],
+                     cut_counts=[1], batch=2, sample=sample)
+    four = plan_tiers(model, params, topology, cut_pool=[cut],
+                      cut_counts=[1], batch=8, sample=sample)
+    p1 = next(p for p in one if p.tier_index == (0, 1))
+    p4 = next(p for p in four if p.tier_index == (0, 1))
+    assert p4.hop_bytes[0] == 4 * p1.hop_bytes[0]
+    assert p4.stage_s[0] == pytest.approx(4 * p1.stage_s[0])
+
+
+def test_suggest_tier_plan_respects_qos(vgg_small, topology):
+    from repro.core.qos import QoSRequirements
+    model, params = vgg_small
+    cuts = model.cut_points()
+    cs = np.linspace(1.0, 0.3, len(cuts))
+    plans = plan_tiers(model, params, topology, cs_curve=cs, layer_idx=cuts)
+    best = suggest_tier_plan(plans, QoSRequirements(10.0, 0.5))
+    assert best is not None and best.accuracy_proxy >= 0.5
+    feasible = [p for p in plans if p.satisfies(QoSRequirements(10.0, 0.5))]
+    assert best.accuracy_proxy == max(p.accuracy_proxy for p in feasible)
+    assert suggest_tier_plan(plans, QoSRequirements(1e-9, 0.99)) is None
+
+
+def test_planner_search_tiers_method(vgg_small, topology):
+    from repro.fleet.planner import DeploymentPlanner
+    model, params = vgg_small
+    cuts = model.cut_points()
+    planner = DeploymentPlanner(
+        model, params, cs_curve=np.linspace(1.0, 0.3, len(cuts)),
+        layer_idx=cuts, accuracy_fn=lambda s, n: 0.9, input_bytes=3072)
+    plans = planner.search_tiers(topology, cut_counts=[2])
+    assert plans and all(len(p.splits) == 2 for p in plans)
+    assert all(isinstance(p, TierPlan) for p in plans)
+
+
+# ------------------------------------------------------------ study facade ----
+@pytest.fixture(scope="module")
+def path_study():
+    from repro.api import Study
+    return Study("vgg16", seed=0).profile().candidates()
+
+
+def test_study_simulate_path_mode(path_study, two_hop_path):
+    study = path_study
+    study.simulate(path=two_hop_path, top_m=5)
+    assert 1 <= len(study.verdicts) <= 5
+    for v in study.verdicts:
+        assert len(v.candidate.splits) == 2
+        assert v.meta["sequential_s"] > 0 and "speedup" in v.meta
+        assert v.latency_s == pytest.approx(
+            v.meta["sequential_s"] / v.meta["speedup"])
+    from repro.core.qos import QoSRequirements
+    best = study.suggest(QoSRequirements(10.0, 0.0))
+    assert best is not None and len(best.candidate.splits) == 2
+
+
+def test_study_suggest_tiers_and_deploy(path_study, topology, toy_data):
+    from repro.core.qos import QoSRequirements
+    study = path_study
+    plan = study.suggest(QoSRequirements(10.0, 0.4), tiers=topology)
+    assert plan is not None and plan.accuracy_proxy >= 0.4
+    assert study.tier_plans[0].latency_s <= plan.latency_s + 1e-12
+    rt = study.deploy()
+    assert tuple(rt.part.splits) == plan.splits
+    xs, _ = toy_data
+    x = np.asarray(xs[:2])
+    res = rt.infer(x, iters=1)
+    ref = rt.reference(x)
+    assert (np.argmax(res.logits, -1) == np.argmax(ref, -1)).all()
+    assert len(res.hops) == len(plan.splits)
+
+
+def test_study_deploy_after_1hop_path_uses_simulated_hop(toy_data):
+    """Regression: a 1-hop path simulation must hand its own link to the
+    deployed runtime, not the study scenario's default channel."""
+    from repro.api import Study
+    from repro.core.qos import QoSRequirements
+    study = Study("vgg16", seed=0).profile().candidates()
+    wan = Channel(5e-3, 5e6, 5e6, seed=7)    # much slower than the default
+    study.simulate(path=[NetworkConfig("tcp", wan)], top_m=3)
+    assert study.suggest(QoSRequirements(10.0, 0.0)) is not None
+    rt = study.deploy()
+    assert len(rt.part.splits) == 1
+    assert rt.hops[0][1] is wan
+
+
+def test_study_deploy_explicit_multicut(path_study, toy_data):
+    study = path_study
+    cuts = tuple(study.model.cut_points()[i] for i in (1, 4))
+    rt = study.deploy(candidate=cuts)
+    xs, _ = toy_data
+    res = rt.infer(np.asarray(xs[:2]), iters=1)
+    assert res.splits == cuts and len(res.stage_s) == 3
+
+
+def test_study_simulate_invalidates_stale_tier_plan(topology, two_hop_path):
+    """A later simulate() must not leave an obsolete tier suggestion
+    owning deploy(): with no fresh suggestion, deploy raises."""
+    from repro.api import Study
+    from repro.core.qos import QoSRequirements
+    study = Study("vgg16", seed=0).profile().candidates()
+    assert study.suggest(QoSRequirements(10.0, 0.0),
+                         tiers=topology) is not None
+    study.simulate()                         # new exploration, link mode
+    with pytest.raises(RuntimeError, match="suggest"):
+        study.deploy()
