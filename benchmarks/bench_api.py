@@ -116,27 +116,40 @@ def bench_overhead(iters: int) -> dict:
     }
 
 
+def run(fast: bool = False, out_path: str = None) -> list:
+    """The ``benchmarks.run`` registry entrypoint (same contract as the
+    other benches: write the JSON artifact, return metric rows)."""
+    iters = 15 if fast else 40
+    doc = {"quick": fast, "overhead": bench_overhead(iters)}
+    o = doc["overhead"]
+    # flat copy of the gated metric for perf_compare's path digging
+    doc["study_overhead_pct"] = o["study_overhead_pct"]
+    out_path = out_path or os.path.join(RESULTS_DIR, "api", "bench_api.json")
+    os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    with open(out_path, "w") as fh:
+        json.dump(doc, fh, indent=1)
+    return [
+        ("api.direct_ms", 0.0, round(o["direct_s"] * 1e3, 3)),
+        ("api.study_ms", 0.0, round(o["study_s"] * 1e3, 3)),
+        ("api.study_overhead_pct", 0.0,
+         round(o["study_overhead_pct"], 2)),
+    ]
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="CI-sized run (fewer timing iterations)")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
-    iters = 15 if args.quick else 40
-
-    doc = {"quick": args.quick, "overhead": bench_overhead(iters)}
-    o = doc["overhead"]
-    # flat copy of the gated metric for perf_compare's path digging
-    doc["study_overhead_pct"] = o["study_overhead_pct"]
+    out = args.out or os.path.join(RESULTS_DIR, "api", "bench_api.json")
+    run(fast=args.quick, out_path=out)
+    with open(out) as fh:
+        o = json.load(fh)["overhead"]
     print(f"direct pipeline  {o['direct_s'] * 1e3:9.2f} ms")
     print(f"Study pipeline   {o['study_s'] * 1e3:9.2f} ms")
     print(f"facade overhead  {o['study_overhead_pct']:9.2f} %  "
           f"(suggests {o['suggested']})")
-
-    out = args.out or os.path.join(RESULTS_DIR, "api", "bench_api.json")
-    os.makedirs(os.path.dirname(out), exist_ok=True)
-    with open(out, "w") as fh:
-        json.dump(doc, fh, indent=1)
     print(f"wrote {out}")
 
 

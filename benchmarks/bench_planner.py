@@ -1,0 +1,157 @@
+"""Planner fast-path benchmark: vectorized closed-form screening vs the
+per-combo event-engine path.
+
+One device -> edge -> cloud topology over the quick VGG model, the full
+``plan_tiers`` cut-list x assignment sweep measured three ways:
+
+* **screen** — the vectorized closed-form pass (``netsim.analytic``)
+  over every combo (``plan_tiers(refine=0)``), reported as plans/sec;
+* **event** — the pre-fast-path cost: one ``simulate_pipeline``
+  discrete-event run per combo (timed on a subset, reported as
+  plans/sec) — the denominator of the headline speedup;
+* **end-to-end** — the default two-phase ``plan_tiers`` (exhaustive
+  screen + Pareto/top-K exact refinement) wall time.
+
+All wall-clock numbers use the min-estimator over repeats (the host is
+noisy; the minimum is the least-interference sample).  The screen's
+correctness rides along: the max relative deviation between screened and
+event-engine latencies over the subset is reported and must stay under
+1e-9 (the closed form is exact on loss-free paths), and the quick
+configuration enforces the >=10x screening speedup acceptance bar.
+
+  PYTHONPATH=src python -m benchmarks.bench_planner [--quick] [--out PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+import warnings
+
+import numpy as np
+
+from repro.fleet.planner import Tier, TierTopology, plan_tiers
+from repro.netsim.channel import Channel
+from repro.netsim.simulator import NetworkPath, simulate_pipeline
+
+from .common import RESULTS_DIR
+
+
+def _model(quick: bool):
+    import jax
+    from repro.models.vgg import vgg_cifar
+    if quick:
+        model = vgg_cifar(n_classes=8, input_hw=16, width_mult=0.25)
+        return model, model.init(jax.random.PRNGKey(0))
+    from benchmarks.common import trained_vgg
+    return trained_vgg()
+
+
+def _topology() -> TierTopology:
+    return TierTopology((
+        Tier("device", "edge-embedded", Channel(1e-3, 100e6, 100e6, seed=1)),
+        Tier("edge", "edge-accelerator", Channel(1e-3, 25e6, 25e6, seed=2)),
+        Tier("cloud", "server-gpu"),
+    ))
+
+
+def _min_wall(fn, reps: int) -> float:
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run(fast: bool = False, out_path: str = None) -> list:
+    model, params = _model(fast)
+    topo = _topology()
+    cuts = model.cut_points()
+    kw = dict(cs_curve=np.linspace(1.0, 0.3, len(cuts)), layer_idx=cuts,
+              batch=16, n_micro=4)
+    reps = 3 if fast else 5
+
+    # default sweep: exhaustive screen + refinement, and no truncation
+    # warning may fire (acceptance: the quick config is fully swept)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        plans = plan_tiers(model, params, topo, **kw)
+    n_combos = len(plans)
+    assert any(p.refined for p in plans), "refinement stage did not run"
+
+    # screening-only plans/sec (stats caches are warm — steady state)
+    screen_s = _min_wall(lambda: plan_tiers(model, params, topo,
+                                            refine=0, **kw), reps)
+    # per-combo event-engine path, timed on a subset (it is the slow
+    # side; the subset spans the latency range via strided selection)
+    sub = plans[::max(1, n_combos // 24)][:24]
+    full = topo.path()
+
+    def _event_price():
+        out = []
+        for p in sub:
+            path = NetworkPath(full.hops[:p.tier_index[-1]])
+            pipe = simulate_pipeline(list(p.stage_s), list(p.hop_bytes),
+                                     path, n_micro=4)
+            out.append(min(pipe.latency_s, pipe.sequential_s))
+        return out
+
+    event_s = _min_wall(_event_price, reps)
+    event_lat = _event_price()
+    # screen-vs-event correctness on the subset (loss-free -> exact)
+    max_rel = max(abs(p.latency_s - ev) / ev
+                  for p, ev in zip(sub, event_lat))
+
+    e2e_s = _min_wall(lambda: plan_tiers(model, params, topo, **kw), reps)
+
+    screen_pps = n_combos / screen_s
+    event_pps = len(sub) / event_s
+    speedup = screen_pps / event_pps
+
+    report = {
+        "quick": fast,
+        "model": model.name,
+        "n_combos": n_combos,
+        "n_event_subset": len(sub),
+        "screen": {
+            "plans_per_s": screen_pps,
+            "wall_ms": screen_s * 1e3,
+            "speedup_vs_event_x": speedup,
+        },
+        "event": {"plans_per_s": event_pps},
+        "plan_tiers": {"e2e_ms": e2e_s * 1e3},
+        "verify": {"max_rel_err": max_rel},
+    }
+    out_path = out_path or os.path.join(RESULTS_DIR, "planner",
+                                        "bench_planner.json")
+    os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=1)
+
+    if max_rel > 1e-9:
+        raise SystemExit(f"closed-form screen diverged from the event "
+                         f"engine: max rel err {max_rel:.3e} > 1e-9")
+    if fast and speedup < 10.0:
+        raise SystemExit(f"screening speedup {speedup:.1f}x < 10x on the "
+                         f"quick configuration (acceptance bar)")
+
+    return [
+        ("planner.n_combos", 0.0, n_combos),
+        ("planner.screen_plans_per_s", 0.0, round(screen_pps, 1)),
+        ("planner.event_plans_per_s", 0.0, round(event_pps, 1)),
+        ("planner.screen_speedup_x", 0.0, round(speedup, 1)),
+        ("planner.e2e_ms", 0.0, round(e2e_s * 1e3, 3)),
+        ("planner.max_rel_err", 0.0, max_rel),
+    ]
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="untrained small model (CI smoke)")
+    ap.add_argument("--out", default=None, help="JSON artifact path")
+    args = ap.parse_args()
+    for row in run(fast=args.quick, out_path=args.out):
+        print(",".join(map(str, row)))

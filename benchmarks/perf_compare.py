@@ -55,6 +55,18 @@ GATE_SPECS = {
     "api": [
         ("study_overhead_pct", "lower", float("inf"), 5.0),
     ],
+    # the planner fast path.  plans/sec and the screen-vs-event speedup
+    # are wall-clock ratios that swing ~4x run-to-run on shared runners
+    # (even with the min-estimator), so they are reported in the
+    # artifact but NOT gated here — the hard >=10x speedup floor is
+    # enforced inside bench_planner --quick itself, where the two sides
+    # are measured back-to-back.  What gates: the end-to-end plan_tiers
+    # wall time on a generous relative band, and the deterministic
+    # closed-form==event-engine agreement on its 1e-9 contract ceiling.
+    "planner": [
+        ("plan_tiers.e2e_ms", "lower", 1.50, None),
+        ("verify.max_rel_err", "lower", float("inf"), 1e-9),
+    ],
     # simulated pipeline numbers are deterministic (event engine +
     # analytic stage times), so they gate at the default tolerance; the
     # speedup must not collapse; the sim-vs-exec error divides by a

@@ -18,6 +18,10 @@ SECTIONS = {
     "fig4": "benchmarks.bench_protocol",
     "micro": "benchmarks.bench_micro",
     "fleet": "benchmarks.bench_fleet",
+    "runtime": "benchmarks.bench_runtime",
+    "api": "benchmarks.bench_api",
+    "pipeline": "benchmarks.bench_pipeline",
+    "planner": "benchmarks.bench_planner",
     "roofline": "benchmarks.roofline",
     # needs >=32 emulated devices; standalone: python -m benchmarks.bench_multipod_wire
     "multipod_wire": "benchmarks.bench_multipod_wire",

@@ -362,7 +362,7 @@ class Study:
     def simulate(self, network=None, fleet=None, path=None, *,
                  n_frames: Optional[int] = None, tiers=None,
                  n_micro: int = 4, top_m: int = 8,
-                 batch: Optional[int] = None,
+                 batch: Optional[int] = None, refine: Optional[int] = None,
                  space=None, **space_overrides) -> "Study":
         """Stage 3: communication-aware simulation of every candidate.
 
@@ -388,11 +388,17 @@ class Study:
         ``batch``-frame sample (microbatching needs a batch to chop;
         default: the study sample's own batch) — pass ``batch=1`` to
         compare against single-link numbers under one QoS budget.
+
+        ``refine`` (fleet mode): two-phase search — screen every
+        (candidate, protocol) leg with the closed-form analytic engine
+        (``netsim.analytic``) and evaluate only the per-device Pareto
+        front + ``refine`` fastest legs exactly; ``None`` (default)
+        evaluates everything exactly.
         """
         n_frames = self.scenario.n_frames if n_frames is None else n_frames
         if fleet is not None:
             return self._simulate_fleet(fleet, n_frames, space,
-                                        space_overrides)
+                                        space_overrides, refine)
         if path is not None:
             return self._simulate_path(path, tiers, n_frames, n_micro,
                                        top_m, batch)
@@ -483,7 +489,8 @@ class Study:
             return acc
         return accuracy_fn
 
-    def _simulate_fleet(self, fleet, n_frames, space, overrides) -> "Study":
+    def _simulate_fleet(self, fleet, n_frames, space, overrides,
+                        refine=None) -> "Study":
         from repro.fleet.planner import DeploymentPlanner, SearchSpace
         trace, devices = fleet
         measured = self._data is not None and self.cfg is None
@@ -504,7 +511,8 @@ class Study:
             kw.update(overrides)
             space = SearchSpace(**kw)
         self._fleet, self._space = (trace, devices), space
-        self._points = self._planner.search(trace, devices, space)
+        self._points = self._planner.search(trace, devices, space,
+                                            refine=refine)
         self._mode = "fleet"
         self._path = None
         self._suggested = self._plans = self._tier_best = None
@@ -548,7 +556,8 @@ class Study:
         return Q.pareto(self.verdicts)
 
     def suggest(self, qos, tiers=None, *, n_micro: int = 4,
-                batch: Optional[int] = None, **tier_kw):
+                batch: Optional[int] = None, refine: Optional[int] = None,
+                **tier_kw):
         """Stage 4: the best design meeting ``qos``
         (:class:`~repro.core.qos.QoSRequirements`).  Single-link mode
         returns a ``SimVerdict`` (or None); fleet mode returns
@@ -557,16 +566,20 @@ class Study:
 
         ``tiers``: a ``fleet.TierTopology`` (device -> edge -> cloud
         chain) — searches cut-list x stage->tier assignment over it
-        (``fleet.plan_tiers``, pipelined microbatching included) and
-        returns the best feasible ``TierPlan`` (or None); a later
-        :meth:`deploy` executes that plan's cut list live.  Tier-plan
-        latencies are makespans of one ``batch``-frame sample (default:
-        the study sample's own batch) — size the QoS budget to that
-        unit, or pass ``batch=1`` for per-frame budgets.
+        (``fleet.plan_tiers``: exhaustive closed-form screen, then exact
+        event-engine refinement of the shortlist — ``refine`` sizes the
+        shortlist, default 8 + the Pareto front) and returns the best
+        feasible ``TierPlan`` (or None); a later :meth:`deploy` executes
+        that plan's cut list live.  Tier-plan latencies are makespans of
+        one ``batch``-frame sample (default: the study sample's own
+        batch) — size the QoS budget to that unit, or pass ``batch=1``
+        for per-frame budgets.
         """
         if tiers is not None:
             from repro.fleet.planner import plan_tiers, suggest_tier_plan
             self._tier_topology = tiers
+            if refine is not None:
+                tier_kw = dict(tier_kw, refine=refine)
             self._tier_plans = plan_tiers(
                 self.model, self.params, tiers, n_micro=n_micro,
                 cs_curve=self.cs_curve, layer_idx=self.layer_idx,

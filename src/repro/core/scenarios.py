@@ -124,6 +124,27 @@ def scenario_times_and_payload(scenario: Scenario, model, params,
             "wire_bytes": sum(st["hop_bytes"])}
 
 
+def cut_payload_bytes_lut(model, params, batch: int = 1, *,
+                          compression: float = 0.5,
+                          wire_dtype_bytes: int = 4,
+                          sample=None) -> np.ndarray:
+    """Wire payload (bytes per ``batch`` frames) for a cut after *every*
+    layer, as one array indexed by layer — the batched counterpart of
+    pricing each cut's activation separately, so the vectorized planner
+    screen gathers ``(n_combos, K)`` hop tensors with one fancy index.
+    Rides the ``stats.summary`` cache; illegal cuts simply carry the
+    payload their activation would have."""
+    import numpy as np
+    from repro.core import bottleneck as B
+    rows = S.summary(model, params, batch, sample=sample)
+    scale = _sample_scale(batch, sample)
+    return np.array(
+        [int(round(r.output_shape[0] * scale))
+         * B.payload_bytes(r.output_shape[1:], compression, wire_dtype_bytes)
+         if len(r.output_shape) > 1 else 0.0
+         for r in rows], dtype=float)
+
+
 def _sample_scale(batch: int, sample) -> float:
     """FLOPs are counted at the sample's own leading dim and rescaled
     linearly to ``batch``."""

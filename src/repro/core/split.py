@@ -138,12 +138,22 @@ def legal_cut_lists(model: LayeredModel, n_cuts: int) -> list:
     """Every legal ordered cut list with exactly ``n_cuts`` cuts.
 
     The K-way search space of the multi-tier planner: all strictly
-    increasing ``n_cuts``-combinations of :func:`legal_cuts`.
+    increasing ``n_cuts``-combinations of :func:`legal_cuts`.  The lists
+    grow combinatorially and the planners enumerate them per search, so
+    they are cached on the model instance (layer structure is immutable
+    in practice) — treat the returned list as read-only.
     """
     import itertools
     if n_cuts < 1:
         raise ValueError(f"n_cuts must be >= 1, got {n_cuts}")
-    return list(itertools.combinations(legal_cuts(model), n_cuts))
+    cache = (model.__dict__.setdefault("_cut_lists_cache", {})
+             if hasattr(model, "__dict__") else None)
+    if cache is not None and n_cuts in cache:
+        return cache[n_cuts]
+    out = list(itertools.combinations(legal_cuts(model), n_cuts))
+    if cache is not None:
+        cache[n_cuts] = out
+    return out
 
 
 def wire_payload_bytes(model: LayeredModel, params, plan: SplitPlan,

@@ -37,6 +37,14 @@ def _layer_mult_adds(layer, p, in_shape, out_shape) -> int:
     return 0
 
 
+def _shape_sig(tree) -> tuple:
+    """Leaf-shape signature of a pytree — what ``summary`` actually
+    depends on (it runs under ``jax.eval_shape``; values never matter)."""
+    if tree is None:
+        return None
+    return tuple(tuple(leaf.shape) for leaf in jax.tree.leaves(tree))
+
+
 def summary(model: LayeredModel, params, batch: int = 16, *,
             sample=None) -> list:
     """Table I: one row per layer.
@@ -44,7 +52,20 @@ def summary(model: LayeredModel, params, batch: int = 16, *,
     ``sample``: example input (array or pytree) for models whose
     ``input_shape`` alone cannot describe the input (transformer layered
     views consume a batch dict); its leading dim wins over ``batch``.
+
+    Rows are cached on the model instance per (param shapes, batch,
+    sample shapes) key — the planners walk this table once per design
+    *study*, not once per design *point* — so treat the returned list as
+    read-only.
     """
+    cache = None
+    if hasattr(model, "__dict__"):
+        cache = model.__dict__.setdefault("_summary_cache", {})
+        # batch is shadowed by the sample's own leading dim when given
+        key = (_shape_sig(params), None if sample is not None else batch,
+               _shape_sig(sample))
+        if key in cache:
+            return cache[key]
     x = sample if sample is not None else jax.ShapeDtypeStruct(
         (batch,) + tuple(model.input_shape), jnp.float32)
     _, acts = jax.eval_shape(model.apply_capture, params, x)
@@ -55,6 +76,8 @@ def summary(model: LayeredModel, params, batch: int = 16, *,
         rows.append(LayerRow(l.name, l.kind, tuple(a.shape), n,
                              _layer_mult_adds(l, p, in_shape, a.shape)))
         in_shape = a.shape
+    if cache is not None:
+        cache[key] = rows
     return rows
 
 
@@ -94,6 +117,18 @@ def flops_split(model: LayeredModel, params, split_layer: int,
     head, tail = flops_stages(model, params, (split_layer,), batch,
                               sample=sample)
     return head, tail
+
+
+def flops_prefix(model: LayeredModel, params, batch: int = 1, *,
+                 sample=None) -> np.ndarray:
+    """Cumulative forward FLOPs (2x mult-adds) at every layer boundary:
+    entry ``i`` is the cost of layers ``[0, i)``, so any stage of any cut
+    list prices as one subtraction — the surface the vectorized planner
+    screen scores ``(n_combos, K+1)`` stage tensors from.  Rides the
+    :func:`summary` cache."""
+    rows = summary(model, params, batch, sample=sample)
+    return np.concatenate(
+        ([0.0], np.cumsum([2.0 * r.mult_adds for r in rows])))
 
 
 def flops_stages(model: LayeredModel, params, cuts, batch: int = 1, *,

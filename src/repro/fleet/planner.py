@@ -15,26 +15,35 @@ a Pareto front over (p99 latency, accuracy, server FLOPs/s) and a
 Beyond the single device->server link, :func:`plan_tiers` searches
 multi-tier chains (:class:`TierTopology`: device -> edge -> cloud):
 cut-list x stage->tier assignment, each design point priced sequentially
-and as a pipelined microbatched schedule
-(``netsim.simulator.simulate_pipeline``).
+and as a pipelined microbatched schedule.
+
+Both searches are two-phase ("screen fast, verify exact"): the whole
+combinatorial space is scored with the vectorized closed-form engine in
+``netsim.analytic`` — exhaustively, as array operations — and only the
+Pareto-front + top-K shortlist is re-priced by the discrete-event engine
+(``netsim.simulator.simulate_pipeline`` / ``measure_flow``), which stays
+the single semantic authority: refinement asserts the closed form agrees
+to 1e-9 relative on loss-free paths.
 """
 from __future__ import annotations
 
 import itertools
 import warnings
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 from typing import Optional, Sequence
 
 import numpy as np
 
 from repro.api.types import SplitCandidate, legal_split_candidates
-from repro.core import bottleneck as B
 from repro.core import stats as S
 from repro.core.qos import QoSRequirements, pareto_nd, rank_candidates
-from repro.core.scenarios import PLATFORMS, PlatformProfile, Scenario
+from repro.core.scenarios import (PLATFORMS, PlatformProfile, Scenario,
+                                  cut_payload_bytes_lut,
+                                  scenario_times_and_payload)
 from repro.core.split import legal_cut_lists, legal_cuts
 from repro.fleet.cluster import ClusterConfig, ClusterSim
 from repro.fleet.traffic import DeviceClass, Trace
+from repro.netsim import analytic
 from repro.netsim.channel import Channel, compose_channels
 from repro.netsim.simulator import (ApplicationSimulator, NetworkConfig,
                                     NetworkPath, measure_flow,
@@ -126,6 +135,7 @@ class TierPlan:
     stage_s: tuple                   # per physical tier (pass-throughs 0)
     hop_bytes: tuple                 # per physical link
     accuracy_proxy: float = 0.0      # min CS over the cuts (weakest stage)
+    refined: bool = False            # latency re-priced by the event engine
 
     @property
     def speedup(self) -> float:
@@ -151,34 +161,83 @@ class TierPlan:
         return out
 
 
+def _screen_combos(model, topology: TierTopology, pool, cut_counts) -> list:
+    """Materialize the (cut list, assignment) candidate set as per-k
+    NumPy blocks: ``(cuts (N,k), assigns (N,k))`` index arrays."""
+    n_links = len(topology) - 1
+    blocks = []
+    for k in (cut_counts or range(1, n_links + 1)):
+        if k > n_links or k > len(pool):
+            continue
+        # enumeration routes through the legality authority, restricted
+        # to the pool — never a locally re-derived cut set
+        cut_lists = [cl for cl in legal_cut_lists(model, k)
+                     if all(c in pool for c in cl)]
+        assigns = list(itertools.combinations(range(1, n_links + 1), k))
+        if not cut_lists or not assigns:
+            continue
+        blocks.append((np.repeat(np.asarray(cut_lists, int),
+                                 len(assigns), axis=0),
+                       np.tile(np.asarray(assigns, int),
+                               (len(cut_lists), 1))))
+    return blocks
+
+
+def _pareto2_indices(plans: Sequence[TierPlan]) -> list:
+    """Indices of the (latency, -accuracy_proxy) Pareto front of a list
+    already sorted by (latency, -proxy) — one linear sweep, no O(N^2)."""
+    out, best = [], -np.inf
+    for i, p in enumerate(plans):
+        if not out or p.accuracy_proxy > best:
+            out.append(i)
+            best = max(best, p.accuracy_proxy)
+    return out
+
+
 def plan_tiers(model, params, topology: TierTopology, *,
                n_micro: int = 4, cs_curve=None, layer_idx=None,
                compression: float = 0.5, wire_dtype_bytes: int = 4,
                batch: int = 1, sample=None, cut_pool=None,
-               cut_counts=None, max_evals: int = 2048) -> list:
+               cut_counts=None, max_evals: int = 2048,
+               refine: int = 8) -> list:
     """Search cut-list x stage->tier assignment over ``topology``.
 
     Every legal cut list of each considered length (default: 1 up to the
     number of links) is combined with every increasing assignment of its
     stages onto the tier chain (stage 0 always on tier 0 — the sensing
     node; skipped tiers forward the payload without computing, ending
-    early is allowed).  Each combination is priced analytically per stage
-    and hop, then scheduled twice: sequentially and as an ``n_micro``-way
-    microbatched pipeline (``netsim.simulator.simulate_pipeline``).
+    early is allowed).  The search is two-phase:
 
-    Returns :class:`TierPlan`\\ s sorted by pipelined latency.
-    ``cut_pool`` restricts the cuts considered (e.g. a CS shortlist);
-    ``max_evals`` bounds the combinatorial sweep — exceeding it warns
-    and truncates (narrow the pool rather than raising it for
-    exhaustiveness).
+    1. **screen** — the *whole* combo set is priced with the vectorized
+       closed-form engine (``netsim.analytic``): per-layer FLOPs prefix
+       sums and per-cut payloads are computed once, every combination's
+       sequential and ``n_micro``-pipelined makespan as array ops.  The
+       screen is exhaustive — no combination is ever dropped.
+    2. **refine** — the (latency, accuracy-proxy) Pareto front plus the
+       ``refine`` fastest survivors are re-priced exactly by the event
+       engine (``netsim.simulator.simulate_pipeline``), with a built-in
+       assertion that the closed form agrees to 1e-9 relative on
+       loss-free paths (``TierPlan.refined`` marks them).  On lossy
+       links the screen is loss-free-optimistic, so refinement iterates
+       to a fixpoint: the front and top-``refine`` of the *final*
+       ordering are guaranteed event-priced (the QoS winner
+       ``suggest_tier_plan`` picks is always on that front); plans
+       outside the shortlist keep the screen price.
+
+    Returns :class:`TierPlan`\\ s for **all** combos, sorted by
+    (pipelined latency, -accuracy proxy).  ``cut_pool`` restricts the
+    cuts considered (e.g. a CS shortlist); ``max_evals`` bounds only the
+    exact-refinement stage (never the sweep) — a shortlist longer than
+    ``max_evals`` warns and refines its head.  ``refine=0`` skips
+    refinement entirely (pure closed-form screen).
     """
     from repro.core.scenarios import _sample_scale
-    n_links = len(topology) - 1
-    rows = S.summary(model, params, batch, sample=sample)
-    # summary() counts at the sample's own leading dim when one is given;
-    # rescale linearly to the requested batch (the shared first-order rule)
     scale = _sample_scale(batch, sample)
-    prefix = np.cumsum([0] + [r.mult_adds for r in rows]) * 2 * scale
+    prefix = S.flops_prefix(model, params, batch, sample=sample) * scale
+    pay = cut_payload_bytes_lut(model, params, batch,
+                                compression=compression,
+                                wire_dtype_bytes=wire_dtype_bytes,
+                                sample=sample)
     pos = ({sp: i for i, sp in enumerate(layer_idx)}
            if cs_curve is not None else {})
     pool = set(legal_cuts(model))
@@ -187,64 +246,118 @@ def plan_tiers(model, params, topology: TierTopology, *,
     if cs_curve is not None:
         pool &= set(pos)
 
-    def payload(cut: int) -> int:
-        shape = rows[cut].output_shape
-        return int(round(shape[0] * scale)) * B.payload_bytes(
-            shape[1:], compression, wire_dtype_bytes)
-
     platforms = topology.platforms
+    n_tiers, n_links = len(topology), len(topology) - 1
     full_path = topology.path()
-    combos = []
-    for k in (cut_counts or range(1, n_links + 1)):
-        if k > n_links or k > len(pool):
-            continue
-        # enumeration routes through the legality authority, restricted
-        # to the pool — never a locally re-derived cut set
-        cut_lists = [cl for cl in legal_cut_lists(model, k)
-                     if all(c in pool for c in cl)]
-        for assign in itertools.combinations(range(1, n_links + 1), k):
-            combos.extend((assign, cuts) for cuts in cut_lists)
-    if len(combos) > max_evals:
-        warnings.warn(
-            f"plan_tiers evaluated only the first {max_evals} of "
-            f"{len(combos)} (cut list, assignment) combinations; the "
-            f"returned plans are NOT the full sweep — narrow cut_pool/"
-            f"cut_counts or raise max_evals", stacklevel=2)
-        combos = combos[:max_evals]
+    pp = analytic.path_params(full_path)
+    cs_lut = np.zeros(len(pay))
+    if cs_curve is not None:
+        for sp, i in pos.items():
+            cs_lut[sp] = float(cs_curve[i])
 
     plans = []
-    for assign, cuts in combos:
-        idx = (0,) + assign
-        last = assign[-1]
-        path = NetworkPath(full_path.hops[:last])
-        bounds = (0,) + tuple(c + 1 for c in cuts) + (len(rows),)
-        stage_s = [0.0] * (last + 1)
-        for j, t in enumerate(idx):
-            f = float(prefix[bounds[j + 1]] - prefix[bounds[j]])
-            stage_s[t] = platforms[t].compute_time(f)
-        hop_bytes = [0] * last
-        for j in range(len(cuts)):
-            for link in range(idx[j], idx[j + 1]):
-                hop_bytes[link] = payload(cuts[j])
-        pipe = simulate_pipeline(stage_s, hop_bytes, path, n_micro=n_micro)
+    for cuts_arr, asg_arr in _screen_combos(model, topology, pool,
+                                            cut_counts):
+        N, k = cuts_arr.shape
+        rows_ix = np.arange(N)[:, None]
+        # (n_combos, K+1) stage-time tensor: prefix-sum differences over
+        # the stage bounds, scattered onto the assigned physical tiers
+        bounds = np.concatenate([np.zeros((N, 1), int), cuts_arr + 1,
+                                 np.full((N, 1), len(pay), int)], axis=1)
+        stage_f = prefix[bounds[:, 1:]] - prefix[bounds[:, :-1]]
+        tier_idx = np.concatenate([np.zeros((N, 1), int), asg_arr], axis=1)
+        stage_t = np.zeros((N, n_tiers))
+        # pricing routes through each platform's compute_time (the single
+        # compute-pricing authority), one vectorized call per tier
+        for t in range(n_tiers):
+            r, c = np.nonzero(tier_idx == t)
+            if len(r):
+                stage_t[r, t] = platforms[t].compute_time(stage_f[r, c])
+        # (n_combos, K) hop-byte tensor: link l carries the payload of
+        # logical hop j = #{assigned tiers <= l}; links past the last
+        # assigned tier are unused
+        cov = (asg_arr[:, :, None]
+               <= np.arange(n_links)[None, None, :]).sum(1)
+        used = cov < k
+        hop_b = np.where(
+            used, pay[cuts_arr[rows_ix, np.clip(cov, 0, k - 1)]], 0.0)
+
+        pipe_s, seq_s = analytic.pipeline_makespan_s(stage_t, hop_b, pp,
+                                                     n_micro, hop_mask=used)
         # microbatching is a choice: where packetisation overhead beats
         # the overlap, the plan ships unchopped (n_micro 1)
-        n_eff, lat = n_micro, pipe.latency_s
-        if pipe.sequential_s < lat:
-            n_eff, lat = 1, pipe.sequential_s
-        proxy = (min(float(cs_curve[pos[c]]) for c in cuts)
-                 if cs_curve is not None else 0.0)
-        plans.append(TierPlan(
-            cuts, tuple(topology[t].name for t in idx), idx,
-            lat, pipe.sequential_s, n_eff,
-            tuple(stage_s), tuple(hop_bytes), proxy))
-    return sorted(plans, key=lambda p: (p.latency_s, -p.accuracy_proxy))
+        lat = np.minimum(pipe_s, seq_s)
+        n_eff = np.where(seq_s < pipe_s, 1, n_micro)
+        proxy = (cs_lut[cuts_arr].min(axis=1) if cs_curve is not None
+                 else np.zeros(N))
+        for i in range(N):
+            idx = tuple(tier_idx[i])
+            last = idx[-1]
+            plans.append(TierPlan(
+                tuple(int(c) for c in cuts_arr[i]),
+                tuple(topology[t].name for t in idx), idx,
+                float(lat[i]), float(seq_s[i]), int(n_eff[i]),
+                tuple(float(s) for s in stage_t[i, :last + 1]),
+                tuple(int(b) for b in hop_b[i, :last]),
+                float(proxy[i])))
+
+    order = lambda p: (p.latency_s, -p.accuracy_proxy)  # noqa: E731
+    plans.sort(key=order)
+    # fixpoint refinement: re-pricing a lossy shortlist moves it upward
+    # (the screen is loss-free-optimistic for TCP), which can promote
+    # un-refined plans into the front/top-K of the *new* ordering —
+    # iterate until the final ordering's Pareto front and `refine`
+    # fastest plans are all event-priced (one pass suffices on exact
+    # paths: prices don't move).  The QoS winner downstream
+    # (suggest_tier_plan) is always on that front, so it can never be a
+    # screen price.  max_evals bounds the total event-engine calls.
+    budget = max_evals if refine else 0
+    while refine and plans:
+        shortlist = sorted(set(_pareto2_indices(plans))
+                           | set(range(min(refine, len(plans)))))
+        todo = [i for i in shortlist if not plans[i].refined]
+        if not todo:
+            break
+        capped = budget < len(todo)
+        if capped:
+            warnings.warn(
+                f"plan_tiers screened all {len(plans)} (cut list, "
+                f"assignment) combinations closed-form, but the event "
+                f"engine re-priced only {max_evals} plans "
+                f"(max_evals={max_evals}); {len(todo) - budget} "
+                f"shortlisted plans keep screen latencies — exact on "
+                f"loss-free paths, loss-free-optimistic otherwise",
+                stacklevel=2)
+            todo = todo[:budget]
+        budget -= len(todo)
+        for i in todo:
+            p = plans[i]
+            path = NetworkPath(full_path.hops[:p.tier_index[-1]])
+            pipe = simulate_pipeline(list(p.stage_s), list(p.hop_bytes),
+                                     path, n_micro=n_micro,
+                                     check_closed_form=True)
+            n_eff, lat = n_micro, pipe.latency_s
+            if pipe.sequential_s < lat:
+                n_eff, lat = 1, pipe.sequential_s
+            plans[i] = replace(p, latency_s=lat,
+                               sequential_s=pipe.sequential_s,
+                               n_micro=n_eff, refined=True)
+        plans.sort(key=order)
+        if capped:
+            break
+    return plans
 
 
 def suggest_tier_plan(plans: Sequence[TierPlan],
                       qos: QoSRequirements) -> Optional[TierPlan]:
     """The best QoS-feasible tier plan: max accuracy proxy, then min
-    pipelined latency (None when nothing in ``plans`` satisfies)."""
+    pipelined latency (None when nothing in ``plans`` satisfies).
+
+    On a :func:`plan_tiers` result (``refine > 0``, ``max_evals`` not
+    hit) the winner is guaranteed event-priced: it always lies on the
+    (latency, -proxy) Pareto front, which refinement re-prices to a
+    fixpoint — so a loss-blind screen latency can never be what clears
+    the QoS bar here."""
     ok = [p for p in plans if p.satisfies(qos)]
     if not ok:
         return None
@@ -441,21 +554,89 @@ class DeploymentPlanner:
         return SearchSpace(split_points=sps,
                            include_lc=self.lc_model is not None)
 
+    # ---------------------------------------------------------- screening ----
+    def _screen_leg(self, device: DeviceClass, label: str,
+                    split: Optional[int], proto: str) -> float:
+        """Closed-form per-frame flow latency (edge + zero-loss wire +
+        server compute) of one (candidate, protocol) leg — the cheap
+        stand-in for :meth:`_flow` the two-phase search screens with
+        (``netsim.analytic``); no event simulation, no forwards.  Like
+        ``measure_flow``, compute times come from the configured cost
+        model when it prices the cell (so a calibrated planner screens
+        with measured numbers), falling back to the analytic model."""
+        scen = self._scenario(device, label, split)
+        times = (self.cost.flow_times(scen.kind, split, batch=1)
+                 if self.cost is not None else None)
+        if times is None:
+            times = scenario_times_and_payload(scen, self.model, self.params,
+                                               input_bytes=self.input_bytes,
+                                               sample=self.sample)
+        wire = 0.0
+        if times["wire_bytes"] > 0:
+            pp = analytic.path_params(
+                NetworkPath((NetworkConfig(proto, device.channel),)))
+            wire = float(analytic.transfer_duration_s(
+                np.array([times["wire_bytes"]]), pp)[0])
+        return times["edge_s"] + wire + times["server_s"]
+
+    def _screened_legs(self, device: DeviceClass, cands, space: SearchSpace,
+                       refine: int) -> set:
+        """Phase-1 screen of one device's (candidate, protocol) legs:
+        keep the (closed-form latency, -accuracy proxy) Pareto front plus
+        the ``refine`` fastest; returns the surviving ``{(label,
+        protocol)}`` set.  LC legs are not screened (no wire, one
+        point)."""
+        legs = []
+        for cand in cands:
+            label, split = cand
+            if label == "LC":
+                continue
+            for proto in space.protocols:
+                if proto not in device.protocols:
+                    continue
+                legs.append((self._screen_leg(device, label, split, proto),
+                             -float(cand.accuracy_proxy), label, proto))
+        legs.sort(key=lambda t: (t[0], t[1]))
+        keep, best = set(), -np.inf
+        for rank, (lat, nproxy, label, proto) in enumerate(legs):
+            if rank < refine or -nproxy > best:
+                keep.add((label, proto))
+            best = max(best, -nproxy)
+        return keep
+
     # ------------------------------------------------------------ search ----
     def search(self, trace: Trace, devices: Sequence[DeviceClass],
-               space: SearchSpace) -> list:
-        """Evaluate the whole space; returns one PlanPoint per combo."""
+               space: SearchSpace, *,
+               refine: Optional[int] = None) -> list:
+        """Evaluate the space; returns one PlanPoint per evaluated combo.
+
+        ``refine=None`` (default) evaluates every combination exactly,
+        as always.  ``refine=k`` makes the search two-phase: every
+        (candidate, protocol) leg is first scored with the closed-form
+        analytic flow model (:meth:`_screen_leg` — no event engine, no
+        forwards), and only the per-device (latency, -accuracy-proxy)
+        Pareto front plus the ``k`` fastest legs are evaluated exactly
+        (event-engine transfer draws, measured accuracy, and the cluster
+        queueing simulation over the full batch x replicas grid).  The
+        screen is loss-blind, so on lossy channels prefer a ``k`` wide
+        enough to keep the retransmission-sensitive alternatives in.
+        """
         points = []
         for device in devices:
             sub = trace.for_device(device.name)
             if not len(sub):
                 continue
-            for label, split in self.candidates(space):
+            cands = self.candidates(space)
+            allowed = (self._screened_legs(device, cands, space, refine)
+                       if refine is not None else None)
+            for label, split in cands:
                 if label == "LC":
                     points.append(self._lc_point(device, sub))
                     continue
                 for proto in space.protocols:
                     if proto not in device.protocols:
+                        continue
+                    if allowed is not None and (label, proto) not in allowed:
                         continue
                     flow = self._flow(device, label, split, proto)
                     for b, r in itertools.product(space.batch_sizes,

@@ -19,6 +19,9 @@ from .channel import Channel
 from .events import EventQueue
 
 MTU_BYTES = 1500
+# default TCP send window (packets); netsim.analytic's closed form keys
+# on the same constant, so tune it here, not at call sites
+TCP_WINDOW = 32
 
 
 @dataclass
@@ -37,7 +40,7 @@ def n_packets_for(n_bytes: int, mtu: int = MTU_BYTES) -> int:
     return max(1, math.ceil(n_bytes / mtu))
 
 
-def simulate_tcp(n_bytes: int, ch: Channel, *, window: int = 32,
+def simulate_tcp(n_bytes: int, ch: Channel, *, window: int = TCP_WINDOW,
                  mtu: int = MTU_BYTES, stream: int = 0,
                  max_rounds: int = 64) -> TransferResult:
     """Windowed reliable transfer; returns total delivery time."""

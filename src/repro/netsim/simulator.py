@@ -134,7 +134,8 @@ class PipelineResult:
 
 
 def simulate_pipeline(stage_s, hop_bytes, path, *, n_micro: int = 4,
-                      stream: int = 0) -> PipelineResult:
+                      stream: int = 0,
+                      check_closed_form: bool = False) -> PipelineResult:
     """Event-driven microbatched execution of a multi-tier split sample.
 
     The sample is chopped into ``n_micro`` microbatches; each tier and
@@ -147,6 +148,13 @@ def simulate_pipeline(stage_s, hop_bytes, path, *, n_micro: int = 4,
     ``stage_s``: K+1 full-sample stage compute times (zero entries model
     pass-through tiers); ``hop_bytes``: K full-sample payloads; ``path``:
     the K-hop :class:`NetworkPath`.
+
+    ``check_closed_form``: cross-check this result against the closed
+    form in ``netsim.analytic`` (loss-free paths only — with loss the
+    closed form is a screen, not a price) and raise ``AssertionError``
+    on >1e-9 relative divergence.  The planner's refinement stage runs
+    with this on, so the screen can never silently disagree with the
+    event engine — which stays the single semantic authority.
     """
     path = as_path(path)
     K = len(path)
@@ -215,9 +223,19 @@ def simulate_pipeline(stage_s, hop_bytes, path, *, n_micro: int = 4,
         simulate_transfer(cfg.protocol, b, cfg.channel, mtu=cfg.mtu,
                           stream=stream * 977 + 97 * k).duration_s
         for k, (cfg, b) in enumerate(zip(path, hop_bytes)))
-    return PipelineResult(max(done.values()), sequential, n_micro,
-                          tuple(stage_s), tuple(hop_bytes),
-                          tuple(done[m] for m in range(n_micro)))
+    result = PipelineResult(max(done.values()), sequential, n_micro,
+                            tuple(stage_s), tuple(hop_bytes),
+                            tuple(done[m] for m in range(n_micro)))
+    if check_closed_form:
+        from . import analytic
+        if analytic.path_params(path).exact:
+            cf_pipe, cf_seq = analytic.closed_form_pipeline(
+                stage_s, hop_bytes, path, n_micro=n_micro)
+            analytic.assert_event_match("pipelined makespan", cf_pipe,
+                                        result.latency_s)
+            analytic.assert_event_match("sequential makespan", cf_seq,
+                                        result.sequential_s)
+    return result
 
 
 def measure_flow(scenario: Scenario, netcfg, model, params,

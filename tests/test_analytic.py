@@ -1,0 +1,293 @@
+"""The planner fast path (``netsim.analytic``): closed-form transfer and
+pipeline makespans vs the event engine, the two-phase screen/refine
+contract of ``plan_tiers`` / ``DeploymentPlanner.search``, and the cached
+stats surfaces the screen is built on."""
+import math
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import stats as S
+from repro.core.scenarios import cut_payload_bytes_lut
+from repro.core.split import SplitPlan, hop_payload_bytes, legal_cut_lists
+from repro.fleet.planner import Tier, TierTopology, plan_tiers
+from repro.netsim import analytic
+from repro.netsim.channel import Channel
+from repro.netsim.protocols import simulate_tcp, simulate_udp
+from repro.netsim.simulator import (NetworkConfig, NetworkPath,
+                                    simulate_pipeline)
+
+REL = 1e-9
+# link-bound (negligible RTT), ack-bound (RTT dominates a window), and a
+# mid WAN profile
+CHANNELS = [(1e-6, 1e9), (5e-2, 1e9), (1e-3, 20e6)]
+# around the packet and window boundaries (window=32 -> 48000 B of MTUs)
+SIZES = [0, 1, 1499, 1500, 1501, 32 * 1500, 32 * 1500 + 1, 300_000]
+
+
+def _cfg(proto, lat, bps, seed=0, loss=0.0):
+    return NetworkConfig(proto, Channel(lat, bps, bps, loss_rate=loss,
+                                        seed=seed))
+
+
+def _isclose(a, b):
+    return math.isclose(a, b, rel_tol=REL, abs_tol=1e-15)
+
+
+# ------------------------------------------------- transfer closed form ----
+@pytest.mark.parametrize("proto", ["tcp", "udp"])
+def test_transfer_closed_form_matches_event_engine(proto):
+    sim = simulate_tcp if proto == "tcp" else simulate_udp
+    for lat, bps in CHANNELS:
+        ch = Channel(lat, bps, bps, seed=3)
+        pp = analytic.path_params(NetworkPath((_cfg(proto, lat, bps),)))
+        for n in SIZES:
+            cf = float(analytic.transfer_duration_s(np.array([n]), pp)[0])
+            ev = sim(n, ch).duration_s
+            assert _isclose(cf, ev), (proto, lat, bps, n, cf, ev)
+
+
+def test_transfer_closed_form_is_vectorized():
+    """(n_combos, n_hops) tensors price hop-by-hop like the scalar
+    event-engine calls, per-hop protocol/channel respected."""
+    tcp_ch = Channel(1e-3, 20e6, 20e6)
+    udp_ch = Channel(1e-4, 1e9, 1e9, seed=1)
+    pp = analytic.path_params(NetworkPath((NetworkConfig("tcp", tcp_ch),
+                                           NetworkConfig("udp", udp_ch))))
+    bytes_ = np.array([[10_000, 50_000], [0, 1500]])
+    out = analytic.transfer_duration_s(bytes_, pp)
+    assert out.shape == (2, 2)
+    for i in range(2):
+        assert _isclose(out[i, 0],
+                        simulate_tcp(int(bytes_[i, 0]), tcp_ch).duration_s)
+        assert _isclose(out[i, 1],
+                        simulate_udp(int(bytes_[i, 1]), udp_ch).duration_s)
+
+
+def test_path_params_exact_flag_and_unknown_protocol():
+    clean = NetworkPath((_cfg("tcp", 1e-3, 20e6),))
+    lossy = NetworkPath((_cfg("tcp", 1e-3, 20e6, loss=0.1),))
+    assert analytic.path_params(clean).exact
+    assert not analytic.path_params(lossy).exact
+    with pytest.raises(ValueError, match="unknown protocol"):
+        analytic.path_params(NetworkPath((NetworkConfig(
+            "quic", Channel(1e-3, 1e9, 1e9)),)))
+
+
+# ------------------------------------------------- pipeline closed form ----
+def _random_case(rng):
+    K = int(rng.integers(1, 4))
+    hops = tuple(_cfg(str(rng.choice(["tcp", "udp"])),
+                      float(rng.choice([1e-6, 1e-4, 1e-3, 1e-2])),
+                      float(rng.choice([1e6, 20e6, 1e9])), seed=k)
+                 for k in range(K))
+    stage_s = [float(rng.choice([0.0, 1e-4, 2e-3, 5e-2]))
+               for _ in range(K + 1)]
+    hop_bytes = [int(rng.choice([0, 1, 1500, 20_000, 300_000]))
+                 for _ in range(K)]
+    return NetworkPath(hops), stage_s, hop_bytes
+
+
+def test_pipeline_closed_form_matches_event_engine_sweep():
+    """Deterministic sweep incl. n_micro=1, zero-byte hops and
+    pass-through (zero-time) stages — the hypothesis test widens this."""
+    rng = np.random.default_rng(7)
+    for trial in range(40):
+        path, stage_s, hop_bytes = _random_case(rng)
+        n_micro = int(rng.integers(1, 6))
+        pipe = simulate_pipeline(stage_s, hop_bytes, path, n_micro=n_micro,
+                                 check_closed_form=True)
+        cf_pipe, cf_seq = analytic.closed_form_pipeline(
+            stage_s, hop_bytes, path, n_micro=n_micro)
+        assert _isclose(cf_pipe, pipe.latency_s)
+        assert _isclose(cf_seq, pipe.sequential_s)
+
+
+def test_closed_form_pipeline_validates_shapes():
+    path = NetworkPath((_cfg("tcp", 1e-3, 20e6),))
+    with pytest.raises(ValueError, match="stage times"):
+        analytic.closed_form_pipeline([1e-3], [1000, 1000], path)
+    with pytest.raises(ValueError, match="n_micro"):
+        analytic.pipeline_makespan_s(np.zeros((1, 2)), np.zeros((1, 1)),
+                                     analytic.path_params(path), n_micro=0)
+
+
+def test_assert_event_match_raises_on_divergence():
+    analytic.assert_event_match("x", 1.0, 1.0 + 1e-12)
+    with pytest.raises(AssertionError, match="semantic authority"):
+        analytic.assert_event_match("x", 1.0, 1.001)
+
+
+# --------------------------------------------------- two-phase plan_tiers ----
+@pytest.fixture(scope="module")
+def topology():
+    return TierTopology((
+        Tier("device", "mcu", Channel(1e-3, 20e6, 20e6, seed=1)),
+        Tier("edge", "edge-accelerator", Channel(1e-3, 30e6, 30e6, seed=2)),
+        Tier("cloud", "server-gpu"),
+    ))
+
+
+def test_plan_tiers_default_sweep_is_exhaustive(vgg_small, topology):
+    """Acceptance: the default sweep screens every combo (no truncation
+    warning) and returns one plan per (cut list, assignment) combo."""
+    model, params = vgg_small
+    cuts = model.cut_points()
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        plans = plan_tiers(model, params, topology, batch=8,
+                           cs_curve=np.linspace(1.0, 0.3, len(cuts)),
+                           layer_idx=cuts)
+    n1, n2 = len(cuts), len(legal_cut_lists(model, 2))
+    assert len(plans) == 2 * n1 + n2
+
+
+def test_plan_tiers_screen_matches_event_engine_on_every_combo(
+        vgg_small, topology):
+    """The closed-form screen must price *every* combo (not only the
+    refined shortlist) identically to the per-combo event engine on this
+    loss-free topology."""
+    model, params = vgg_small
+    plans = plan_tiers(model, params, topology, batch=4, refine=0)
+    assert plans and not any(p.refined for p in plans)
+    full = topology.path()
+    for p in plans:
+        path = NetworkPath(full.hops[:p.tier_index[-1]])
+        pipe = simulate_pipeline(list(p.stage_s), list(p.hop_bytes), path,
+                                 n_micro=4)
+        want = min(pipe.latency_s, pipe.sequential_s)
+        assert _isclose(p.latency_s, want), p
+        assert _isclose(p.sequential_s, pipe.sequential_s), p
+
+
+def test_plan_tiers_refines_shortlist_and_marks_plans(vgg_small, topology):
+    model, params = vgg_small
+    plans = plan_tiers(model, params, topology, batch=4, refine=3)
+    n_ref = sum(p.refined for p in plans)
+    assert 3 <= n_ref < len(plans)
+    # refinement on a loss-free path must not change any latency
+    screen = plan_tiers(model, params, topology, batch=4, refine=0)
+    for a, b in zip(plans, screen):
+        assert a.splits == b.splits and a.tier_index == b.tier_index
+        assert _isclose(a.latency_s, b.latency_s)
+
+
+def test_plan_tiers_max_evals_bounds_refinement_not_the_sweep(
+        vgg_small, topology):
+    """max_evals caps only the exact-refinement stage: all combos are
+    still returned, and the warning says what was skipped."""
+    model, params = vgg_small
+    cuts = model.cut_points()
+    with pytest.warns(UserWarning, match="screened all") as rec:
+        plans = plan_tiers(model, params, topology, batch=4,
+                           cs_curve=np.linspace(1.0, 0.3, len(cuts)),
+                           layer_idx=cuts, refine=10, max_evals=2)
+    assert "re-priced only 2 plans" in str(rec[0].message)
+    n1, n2 = len(cuts), len(legal_cut_lists(model, 2))
+    assert len(plans) == 2 * n1 + n2          # the sweep stays exhaustive
+    assert sum(p.refined for p in plans) == 2
+
+
+def test_plan_tiers_lossy_links_repriced_by_event_engine(vgg_small):
+    """On lossy links the screen is loss-blind, so refined survivors must
+    carry the event engine's (loss-aware) latency."""
+    model, params = vgg_small
+    topo = TierTopology((
+        Tier("device", "mcu", Channel(1e-3, 20e6, 20e6, loss_rate=0.2,
+                                      seed=1)),
+        Tier("cloud", "server-gpu"),
+    ))
+    plans = plan_tiers(model, params, topo, batch=4, refine=4)
+    refined = [p for p in plans if p.refined]
+    assert refined
+    for p in refined:
+        pipe = simulate_pipeline(list(p.stage_s), list(p.hop_bytes),
+                                 NetworkPath(topo.path().hops[:1]),
+                                 n_micro=4)
+        assert _isclose(p.latency_s, min(pipe.latency_s, pipe.sequential_s))
+    # TCP retransmissions under 20% loss must show up in refined prices
+    screen = plan_tiers(model, params, topo, batch=4, refine=0)
+    by_key = {(p.splits, p.tier_index): p for p in screen}
+    assert any(p.latency_s > by_key[(p.splits, p.tier_index)].latency_s
+               for p in refined)
+    # fixpoint guarantee: the final ordering's head and its whole
+    # (latency, -proxy) Pareto front are event-priced, so the QoS winner
+    # downstream can never clear the bar on a loss-blind screen price
+    from repro.core.qos import QoSRequirements
+    from repro.fleet.planner import _pareto2_indices, suggest_tier_plan
+    assert plans[0].refined
+    assert all(plans[i].refined for i in _pareto2_indices(plans))
+    best = suggest_tier_plan(plans, QoSRequirements(10.0, 0.0))
+    assert best is not None and best.refined
+
+
+# ------------------------------------------------- two-phase fleet search ----
+def test_search_refine_returns_subset_with_identical_points(vgg_small):
+    from repro.fleet import (DeploymentPlanner, DeviceClass, SearchSpace,
+                             generate_trace)
+    model, params = vgg_small
+    from repro.models.vgg import feature_index
+    fi = feature_index(model)
+    planner = DeploymentPlanner(
+        model, params, cs_curve=np.linspace(1.0, 0.2, len(fi)),
+        layer_idx=fi, accuracy_fn=lambda s, n: 0.9,
+        input_bytes=16 * 16 * 3 * 4, n_frames=4)
+    mix = [DeviceClass.make("mcu", Channel(1e-3, 1e6, 1e6, seed=1)),
+           DeviceClass.make("edge-embedded",
+                            Channel(1e-4, 50e6, 50e6, seed=2))]
+    legal = set(model.cut_points())
+    space = SearchSpace(split_points=tuple(sp for sp in fi
+                                           if sp in legal)[:3],
+                        batch_sizes=(1, 4), top_k_splits=3)
+    trace = generate_trace(mix, 200, 100.0, seed=5)
+    full = planner.search(trace, mix, space)
+    fast = planner.search(trace, mix, space, refine=1)
+    assert 0 < len(fast) < len(full)
+    key = lambda p: (p.device, p.label, p.protocol, p.max_batch,  # noqa: E731
+                     p.n_replicas)
+    by_key = {key(p): p for p in full}
+    for p in fast:
+        assert p == by_key[key(p)]            # identical exact evaluation
+    # the fastest leg per device survives screening
+    for d in ("mcu", "edge-embedded"):
+        best = min((p for p in full if p.device == d),
+                   key=lambda p: p.p99_s)
+        assert any(key(p) == key(best) for p in fast) or best.label == "LC"
+
+
+# ------------------------------------------------------- cached surfaces ----
+def test_summary_rows_cached_per_key(vgg_small):
+    model, params = vgg_small
+    a = S.summary(model, params, batch=4)
+    assert S.summary(model, params, batch=4) is a
+    assert S.summary(model, params, batch=8) is not a
+    # a params pytree with identical leaf shapes hits the same entry
+    clone = [dict(p) if isinstance(p, dict) else p for p in params]
+    assert S.summary(model, clone, batch=4) is a
+
+
+def test_flops_prefix_matches_flops_stages(vgg_small):
+    model, params = vgg_small
+    cuts = model.cut_points()
+    prefix = S.flops_prefix(model, params, batch=2)
+    assert prefix.shape == (len(model.layers) + 1,)
+    pair = (cuts[1], cuts[3])
+    bounds = [0] + [c + 1 for c in pair] + [len(model.layers)]
+    want = S.flops_stages(model, params, pair, batch=2)
+    got = [float(prefix[b] - prefix[a]) for a, b in zip(bounds, bounds[1:])]
+    assert got == pytest.approx(want)
+
+
+def test_cut_payload_lut_matches_hop_payload_bytes(vgg_small):
+    model, params = vgg_small
+    lut = cut_payload_bytes_lut(model, params, batch=4, compression=0.5)
+    for cut in model.cut_points():
+        want = hop_payload_bytes(model, params, SplitPlan(cut), batch=4)[0]
+        assert int(lut[cut]) == want
+
+
+def test_legal_cut_lists_cached(vgg_small):
+    model, _ = vgg_small
+    assert legal_cut_lists(model, 2) is legal_cut_lists(model, 2)
+    assert legal_cut_lists(model, 1) == [(c,) for c in model.cut_points()]

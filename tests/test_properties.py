@@ -131,6 +131,40 @@ def test_wire_byte_format_roundtrip(b, rows, c, kind, seed):
 
 
 @settings(**SET)
+@given(n_hops=st.integers(1, 3), n_micro=st.integers(1, 6),
+       seed=st.integers(0, 10_000))
+def test_pipeline_closed_form_matches_event_engine(n_hops, n_micro, seed):
+    """The planner fast path's contract: on loss-free paths the closed
+    forms in ``netsim.analytic`` reproduce ``simulate_pipeline``'s
+    sequential *and* pipelined makespans to 1e-9 relative — across random
+    stage/hop/path tensors, n_micro=1, zero-byte hops and pass-through
+    (zero-time) stages."""
+    import math
+
+    from repro.netsim import analytic
+    from repro.netsim.simulator import (NetworkConfig, NetworkPath,
+                                        simulate_pipeline)
+    rng = np.random.default_rng(seed)
+    hops = tuple(NetworkConfig(str(rng.choice(["tcp", "udp"])),
+                               Channel(float(rng.choice([1e-6, 1e-4, 1e-2])),
+                                       float(rng.choice([1e6, 20e6, 1e9])),
+                                       float(rng.choice([20e6, 1e9])),
+                                       seed=k))
+                 for k in range(n_hops))
+    path = NetworkPath(hops)
+    stage_s = [float(rng.choice([0.0, 1e-4, 2e-3, 5e-2]))
+               for _ in range(n_hops + 1)]
+    hop_bytes = [int(rng.choice([0, 1, 1500, 20_000, 300_000]))
+                 for _ in range(n_hops)]
+    pipe = simulate_pipeline(stage_s, hop_bytes, path, n_micro=n_micro)
+    cf_pipe, cf_seq = analytic.closed_form_pipeline(stage_s, hop_bytes,
+                                                    path, n_micro=n_micro)
+    assert math.isclose(cf_pipe, pipe.latency_s, rel_tol=1e-9, abs_tol=1e-15)
+    assert math.isclose(cf_seq, pipe.sequential_s, rel_tol=1e-9,
+                        abs_tol=1e-15)
+
+
+@settings(**SET)
 @given(sq=st.sampled_from([32, 64]), sk=st.sampled_from([32, 64, 128]),
        g=st.sampled_from([1, 2, 4]), seed=st.integers(0, 100))
 def test_attention_softmax_convexity(sq, sk, g, seed):
