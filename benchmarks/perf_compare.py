@@ -67,6 +67,15 @@ GATE_SPECS = {
         ("plan_tiers.e2e_ms", "lower", 1.50, None),
         ("verify.max_rel_err", "lower", float("inf"), 1e-9),
     ],
+    # telemetry must be free when off and cheap when on: both overheads
+    # are paired-ratio medians of two wall clocks (bench_obs measures A
+    # and B back-to-back per pair so host drift cancels), gated on hard
+    # absolute ceilings — null recorder <1% on the bare event loop,
+    # recording <5% on the runtime's jitted path
+    "obs": [
+        ("overhead.null_pct", "lower", float("inf"), 1.0),
+        ("overhead.record_pct", "lower", float("inf"), 5.0),
+    ],
     # simulated pipeline numbers are deterministic (event engine +
     # analytic stage times), so they gate at the default tolerance; the
     # speedup must not collapse; the sim-vs-exec error divides by a

@@ -58,6 +58,10 @@ _EXPORTS = {
     "suggest_tier_plan": ("repro.fleet.planner", "suggest_tier_plan"),
     "CalibrationTable": ("repro.runtime.calibrate", "CalibrationTable"),
     "calibrate": ("repro.runtime.calibrate", "calibrate"),
+    # telemetry (Study.observe and standalone recorders)
+    "Recorder": ("repro.obs", "Recorder"),
+    "NullRecorder": ("repro.obs", "NullRecorder"),
+    "TelemetryReport": ("repro.obs", "TelemetryReport"),
     # toy data for the runnable walkthroughs
     "toy_images": ("repro.data.synthetic", "toy_images"),
     "toy_image_iter": ("repro.data.synthetic", "toy_image_iter"),

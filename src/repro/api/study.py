@@ -34,6 +34,16 @@ measured :class:`~repro.runtime.calibrate.CalibrationTable`, falling
 back to the analytic FLOPs model for cells the grid didn't cover —
 ``simulate`` never needs to know which source answered.
 
+Telemetry rides the same chain: ``study.observe()`` arms a
+``repro.obs.Recorder`` and returns a live
+:class:`~repro.obs.report.TelemetryReport`; every stage that runs
+*afterwards* records into it — fleet simulations emit request lifecycle
+spans and windowed metrics, planners phase spans, deployed runtimes
+per-stage/per-hop span trees — and
+``report.to_chrome_trace("trace.json")`` exports the lot for Perfetto.
+Without ``observe()`` every subsystem sees the null recorder and pays
+nothing.
+
 ``Study`` accepts a :class:`~repro.models.layered.LayeredModel`, a
 transformer ``ModelConfig`` (viewed through ``transformer_as_layered``),
 or a config name: ``"vgg16"`` builds the CPU-trainable VGG variant, any
@@ -110,6 +120,7 @@ class Study:
         self.compression = compression
         self.lc_model, self.lc_params = lc if lc is not None else (None, None)
         self._data = data
+        self._recorder = None            # armed by observe()
         self._resolve_model(model, params, reduce, batch, seq_len)
         # stage caches
         self._cs = None
@@ -124,6 +135,7 @@ class Study:
         self._points = None
         self._suggested = None
         self._plans = None
+        self._deployment_stats = None    # traced joint validation (observe)
         self._path = None                # NetworkPath of the last path sim
         self._tier_topology = None
         self._tier_plans = None
@@ -193,6 +205,33 @@ class Study:
                 rng.integers(0, self.model.n_classes, b), jnp.int32)
             self._sample = None
             self.input_bytes = int(np.prod(shape[1:])) * 4
+
+    # --------------------------------------------------------- telemetry ----
+    def observe(self, *, window_s: float = 0.05):
+        """Arm telemetry and return a live
+        :class:`~repro.obs.report.TelemetryReport`.
+
+        The first call creates the study's ``repro.obs.Recorder``
+        (``window_s`` sets the fleet metrics sampling window, simulated
+        seconds); every stage that runs afterwards records into it —
+        call ``observe()`` *before* the stages you want traced.
+        Subsequent calls return the same live report (the recorder is
+        shared, so spans and time series keep accumulating across
+        stages).  Export with ``report.to_chrome_trace(path)`` and open
+        in Perfetto (https://ui.perfetto.dev).
+        """
+        if self._recorder is None:
+            from repro.obs import Recorder
+            self._recorder = Recorder(window_s=window_s)
+        return self._recorder.report()
+
+    @property
+    def _obs(self):
+        """The armed recorder, or the shared null recorder (free)."""
+        if self._recorder is not None:
+            return self._recorder
+        from repro.obs import NULL
+        return NULL
 
     # ---------------------------------------------------------- training ----
     def fit(self, *, steps: int = 300, lr: float = 5e-3, batch: int = 32,
@@ -339,9 +378,12 @@ class Study:
         from repro.runtime.calibrate import calibrate as _calibrate
         splits = [c.split_layer for c in self.split_candidates()] \
             if splits is None else list(splits)
-        self._calibration = _calibrate(self.model, self.params, splits,
-                                       ae_map=self._ae_map, x=self._x,
-                                       iters=iters, quantize=quantize)
+        with self._obs.tracer.span("study.calibrate", tid="study",
+                                   cat="study") as sp:
+            sp.args.update(n_splits=len(splits), iters=iters)
+            self._calibration = _calibrate(self.model, self.params, splits,
+                                           ae_map=self._ae_map, x=self._x,
+                                           iters=iters, quantize=quantize)
         self._mode = None
         return self
 
@@ -405,11 +447,17 @@ class Study:
         netcfg = self._netcfg(network)
         verdicts = []
         measured = self._data is not None and self.cfg is None
+        tracer = self._obs.tracer
         for cand in self.candidate_list:
             scen = cand.scenario(self.scenario.edge, self.scenario.server)
-            flow = measure_flow(scen, netcfg, self.model, self.params,
-                                self.input_bytes, n_frames=n_frames,
-                                cost=self._calibration, sample=self._sample)
+            with tracer.span(f"study.simulate:{cand.label}", tid="study",
+                             cat="study") as sp:
+                flow = measure_flow(scen, netcfg, self.model, self.params,
+                                    self.input_bytes, n_frames=n_frames,
+                                    cost=self._calibration,
+                                    sample=self._sample)
+                sp.args.update(wire_bytes=flow["wire_bytes"],
+                               cost_source=flow["cost_source"])
             if measured:
                 sim = ApplicationSimulator(
                     self.model, self.params, netcfg,
@@ -503,7 +551,8 @@ class Study:
             lc_model=self.lc_model, lc_params=self.lc_params,
             server_platform=self.scenario.server,
             input_bytes=self.input_bytes, n_frames=n_frames,
-            cost=self._calibration, sample=self._sample)
+            cost=self._calibration, sample=self._sample,
+            obs=self._obs)
         if space is None:
             sps = tuple(c.split_layer for c in self.split_candidates())
             kw = dict(split_points=sps,
@@ -546,6 +595,13 @@ class Study:
             raise RuntimeError("planner needs simulate(fleet=...) first")
         return self._planner
 
+    @property
+    def deployment_stats(self):
+        """Per-group ``ClusterStats`` from the traced joint validation an
+        observed fleet suggestion runs (``observe()`` then
+        ``suggest(qos)``); ``None`` when telemetry is off."""
+        return self._deployment_stats
+
     # ------------------------------------------------------------ output ----
     def pareto(self) -> list:
         """The non-dominated set of the last simulation — accuracy/latency
@@ -585,7 +641,7 @@ class Study:
                 cs_curve=self.cs_curve, layer_idx=self.layer_idx,
                 compression=self.compression, sample=self._sample,
                 batch=self._frame_batch() if batch is None else batch,
-                **tier_kw)
+                obs=self._obs, **tier_kw)
             self._tier_best = suggest_tier_plan(self._tier_plans, qos)
             self._suggested = self._plans = None     # latest suggestion wins
             return self._tier_best
@@ -593,6 +649,17 @@ class Study:
         if self._mode == "fleet":
             self._plans = self._planner.suggest(qos, self._fleet,
                                                 points=self._points)
+            if self._recorder is not None and any(
+                    p is not None and p.label != "LC"
+                    for p in self._plans.values()):
+                # the observed fleet run: re-simulate the *chosen* plans
+                # jointly (shared clusters, mixed trace) under the
+                # recorder — the planner's grid sims stay untraced
+                from repro.fleet.planner import simulate_deployment
+                trace, devices = self._fleet
+                self._deployment_stats = simulate_deployment(
+                    self._plans, trace, devices, self._planner,
+                    obs=self._recorder)
             return self._plans
         best = Q.suggest(self.verdicts, qos)
         self._suggested = best
@@ -674,6 +741,8 @@ class Study:
         if isinstance(hops, str):            # protocol over the study link
             return SplitRuntime(self.model, self.params, splits, ae=ae,
                                 channel=self.scenario.channel, protocol=hops,
-                                quantize=quantize, backend=backend)
+                                quantize=quantize, backend=backend,
+                                obs=self._recorder)
         return SplitRuntime(self.model, self.params, splits, ae=ae,
-                            channel=hops, quantize=quantize, backend=backend)
+                            channel=hops, quantize=quantize, backend=backend,
+                            obs=self._recorder)

@@ -48,6 +48,7 @@ from repro.netsim.channel import Channel, compose_channels
 from repro.netsim.simulator import (ApplicationSimulator, NetworkConfig,
                                     NetworkPath, measure_flow,
                                     simulate_pipeline)
+from repro.obs import NULL
 from repro.serving.engine import BatchCostModel
 
 
@@ -199,7 +200,7 @@ def plan_tiers(model, params, topology: TierTopology, *,
                compression: float = 0.5, wire_dtype_bytes: int = 4,
                batch: int = 1, sample=None, cut_pool=None,
                cut_counts=None, max_evals: int = 2048,
-               refine: int = 8) -> list:
+               refine: int = 8, obs=None) -> list:
     """Search cut-list x stage->tier assignment over ``topology``.
 
     Every legal cut list of each considered length (default: 1 up to the
@@ -230,8 +231,17 @@ def plan_tiers(model, params, topology: TierTopology, *,
     exact-refinement stage (never the sweep) — a shortlist longer than
     ``max_evals`` warns and refines its head.  ``refine=0`` skips
     refinement entirely (pure closed-form screen).
+
+    ``obs`` (a ``repro.obs.Recorder``): the two phases become wall-clock
+    spans — ``planner.screen`` with the swept combo count,
+    ``planner.refine`` with the event-engine re-pricing count and
+    fixpoint rounds — plus ``planner.screen_combos`` /
+    ``planner.refined_plans`` counters, so the screen/refine split is
+    *visible* in the exported trace rather than asserted by a benchmark.
     """
     from repro.core.scenarios import _sample_scale
+    obs = NULL if obs is None else obs
+    t_screen0 = obs.tracer.wall_now()
     scale = _sample_scale(batch, sample)
     prefix = S.flops_prefix(model, params, batch, sample=sample) * scale
     pay = cut_payload_bytes_lut(model, params, batch,
@@ -301,6 +311,13 @@ def plan_tiers(model, params, topology: TierTopology, *,
                 tuple(int(b) for b in hop_b[i, :last]),
                 float(proxy[i])))
 
+    if obs.enabled:
+        obs.tracer.add("planner.screen", t_screen0, obs.tracer.wall_now(),
+                       clock="wall", tid="planner", cat="planner",
+                       args={"n_combos": len(plans), "n_micro": n_micro,
+                             "n_tiers": n_tiers})
+        obs.metrics.counter("planner.screen_combos").inc(len(plans))
+
     order = lambda p: (p.latency_s, -p.accuracy_proxy)  # noqa: E731
     plans.sort(key=order)
     # fixpoint refinement: re-pricing a lossy shortlist moves it upward
@@ -312,6 +329,7 @@ def plan_tiers(model, params, topology: TierTopology, *,
     # (suggest_tier_plan) is always on that front, so it can never be a
     # screen price.  max_evals bounds the total event-engine calls.
     budget = max_evals if refine else 0
+    t_refine0, n_refined, n_rounds = obs.tracer.wall_now(), 0, 0
     while refine and plans:
         shortlist = sorted(set(_pareto2_indices(plans))
                            | set(range(min(refine, len(plans)))))
@@ -342,9 +360,17 @@ def plan_tiers(model, params, topology: TierTopology, *,
             plans[i] = replace(p, latency_s=lat,
                                sequential_s=pipe.sequential_s,
                                n_micro=n_eff, refined=True)
+        n_refined += len(todo)
+        n_rounds += 1
         plans.sort(key=order)
         if capped:
             break
+    if obs.enabled and refine:
+        obs.tracer.add("planner.refine", t_refine0, obs.tracer.wall_now(),
+                       clock="wall", tid="planner", cat="planner",
+                       args={"n_refined": n_refined, "rounds": n_rounds,
+                             "n_combos": len(plans)})
+        obs.metrics.counter("planner.refined_plans").inc(n_refined)
     return plans
 
 
@@ -406,6 +432,14 @@ class DeploymentPlanner:
     the same choice, kept as a deprecation shim (``cost=table`` is the
     one-argument replacement for ``cost_source="measured",
     calibration=table``).
+
+    ``obs`` (a ``repro.obs.Recorder``): :meth:`search` emits wall-clock
+    phase spans (one per device class, with leg/point counts) and
+    ``planner.evaluated_points`` / ``planner.screened_legs`` counters.
+    The throwaway grid-point cluster simulations are deliberately *not*
+    traced (a full search would swamp the trace with dead design
+    points); :func:`simulate_deployment` traces the chosen plans' shared
+    clusters instead.
     """
 
     def __init__(self, model, params, *, cs_curve, layer_idx,
@@ -414,7 +448,7 @@ class DeploymentPlanner:
                  server_platform=PLATFORMS["server-gpu"],
                  input_bytes: Optional[int] = None, n_frames: int = 8,
                  cost=None, cost_source: Optional[str] = None,
-                 calibration=None, sample=None):
+                 calibration=None, sample=None, obs=None):
         if cost_source is not None or calibration is not None:
             warnings.warn(
                 "DeploymentPlanner(cost_source=..., calibration=...) is "
@@ -468,6 +502,7 @@ class DeploymentPlanner:
         # example input pytree for models whose input_shape cannot
         # describe the input (transformer layered views)
         self.sample = sample
+        self.obs = NULL if obs is None else obs
         self._flow_cache = {}
         self._cost_cache = {}
 
@@ -621,14 +656,18 @@ class DeploymentPlanner:
         screen is loss-blind, so on lossy channels prefer a ``k`` wide
         enough to keep the retransmission-sensitive alternatives in.
         """
+        obs = self.obs
         points = []
         for device in devices:
             sub = trace.for_device(device.name)
             if not len(sub):
                 continue
+            t_dev0, n_before = obs.tracer.wall_now(), len(points)
             cands = self.candidates(space)
             allowed = (self._screened_legs(device, cands, space, refine)
                        if refine is not None else None)
+            if obs.enabled and allowed is not None:
+                obs.metrics.counter("planner.screened_legs").inc(len(allowed))
             for label, split in cands:
                 if label == "LC":
                     points.append(self._lc_point(device, sub))
@@ -644,6 +683,15 @@ class DeploymentPlanner:
                         points.append(self._cluster_point(
                             device, sub, label, split, proto, flow,
                             b, r, space.batch_window_s))
+            if obs.enabled:
+                n_dev = len(points) - n_before
+                obs.tracer.add(f"planner.search:{device.name}", t_dev0,
+                               obs.tracer.wall_now(), clock="wall",
+                               tid="planner", cat="planner",
+                               args={"n_points": n_dev,
+                                     "n_requests": len(sub),
+                                     "screened": allowed is not None})
+                obs.metrics.counter("planner.evaluated_points").inc(n_dev)
         return points
 
     def _lc_point(self, device: DeviceClass, sub: Trace) -> PlanPoint:
@@ -729,12 +777,19 @@ class DeploymentPlanner:
 
 def simulate_deployment(plans: dict, trace: Trace,
                         devices: Sequence[DeviceClass],
-                        planner: DeploymentPlanner) -> dict:
+                        planner: DeploymentPlanner, *, obs=None) -> dict:
     """Joint validation: run the chosen per-class plans against the *mixed*
     trace, sharing one cluster per (split, batch, replicas) group so device
     classes genuinely contend for the same replicas.  Each group runs under
     the batching window its plans were searched with.  Returns fleet-level
-    p50/p99 per group."""
+    p50/p99 per group.
+
+    ``obs``: the shared clusters run fully traced — per-request lifecycle
+    spans (wire -> queue wait -> service), per-replica batch tracks, and
+    the windowed fleet time series.  This is *the* fleet simulation
+    ``Study.observe()`` exports: the deployment you actually chose, under
+    the mixed trace."""
+    obs = NULL if obs is None else obs
     by_dev = {d.name: d for d in devices}
     groups = {}
     for name, plan in plans.items():
@@ -746,17 +801,20 @@ def simulate_deployment(plans: dict, trace: Trace,
     out = {}
     for (split, b, r, window_s), members in groups.items():
         cost = planner._cost_model(split)
-        sim = ClusterSim(cost, ClusterConfig(r, b, window_s))
+        sim = ClusterSim(cost, ClusterConfig(r, b, window_s), obs=obs)
         pre = {}
         for plan in members:
             device = by_dev[plan.device]
             flow = planner._flow(device, plan.label, plan.split_layer,
                                  plan.protocol)
             sub = trace.for_device(plan.device)
+            wire_bytes = int(flow.get("wire_bytes", 0))
             for i, req in enumerate(sub.requests):
-                head = flow["edge_s"] + flow["wire_s"][i % len(flow["wire_s"])]
+                wire = flow["wire_s"][i % len(flow["wire_s"])]
+                head = flow["edge_s"] + wire
                 pre[req.rid] = head
-                sim.offer(req.rid, req.t_arrival + head)
+                sim.offer(req.rid, req.t_arrival + head,
+                          tx_s=wire, tx_bytes=wire_bytes)
         stats = sim.run()
         lat = np.array([pre[rec.rid] + rec.latency_s for rec in stats.served])
         out[(split, b, r, window_s)] = {

@@ -57,13 +57,14 @@ class Trace:
     requests: tuple                     # FleetRequest, sorted by t_arrival
     horizon_s: float
     pattern: str
+    seed: Optional[int] = None          # provenance: the generating seed
 
     def __len__(self):
         return len(self.requests)
 
     def for_device(self, name: str) -> "Trace":
         sub = tuple(r for r in self.requests if r.device == name)
-        return Trace(sub, self.horizon_s, self.pattern)
+        return Trace(sub, self.horizon_s, self.pattern, self.seed)
 
     def mean_rate_hz(self) -> float:
         return len(self.requests) / self.horizon_s if self.horizon_s else 0.0
@@ -126,7 +127,10 @@ def generate_trace(mix: Sequence[DeviceClass], n_requests: int,
                    rate_hz: float, *, pattern: str = "poisson",
                    seed: int = 0, **pattern_kw) -> Trace:
     """A deterministic fleet trace: arrival times from the chosen process,
-    device classes drawn independently with probability ∝ weight."""
+    device classes drawn independently with probability ∝ weight.  The
+    seed is recorded on the returned :class:`Trace` so downstream
+    artifacts (exported telemetry, CI trace diffs) carry their own
+    provenance."""
     if pattern not in _PROCESSES:
         raise ValueError(f"unknown pattern {pattern!r}; "
                          f"choose from {ARRIVAL_PATTERNS}")
@@ -139,4 +143,4 @@ def generate_trace(mix: Sequence[DeviceClass], n_requests: int,
     picks = rng.choice(len(mix), size=n_requests, p=w / w.sum())
     reqs = tuple(FleetRequest(i, float(times[i]), mix[picks[i]].name)
                  for i in range(n_requests))
-    return Trace(reqs, float(times[-1]), pattern)
+    return Trace(reqs, float(times[-1]), pattern, seed)

@@ -26,6 +26,7 @@ import numpy as np
 
 from repro.netsim.channel import Channel
 from repro.netsim.protocols import simulate_transfer
+from repro.obs import NULL, Span, labelled
 from repro.runtime import wire as W
 from repro.runtime.partition import Partition, make_partition
 from repro.serving.continuous import SlotPool
@@ -59,7 +60,10 @@ class RuntimeResult:
     number of cuts: ``head_s`` is stage 0, ``tail_s`` sums the later
     stages, and ``encode_s``/``transfer_s``/``decode_s``/``wire_bytes``
     sum over hops.  The per-stage / per-hop breakdown lives in
-    ``stage_s`` and ``hops``.
+    ``stage_s`` and ``hops``, and ``trace`` holds the same decomposition
+    as a span tree (``infer`` -> ``stage{k}`` -> ``encode``/``transfer``/
+    ``decode`` per hop) on a reconstructed timeline, so an executed run
+    and a simulated one are comparable span-by-span in Perfetto.
     """
     logits: np.ndarray
     split_layer: int                 # first (edge-side) cut
@@ -73,6 +77,7 @@ class RuntimeResult:
     splits: tuple = ()               # full ordered cut list
     stage_s: tuple = ()              # per-stage compute seconds (K+1)
     hops: tuple = ()                 # per-hop dicts: bytes/encode_s/...
+    trace: Optional[Span] = None     # root span of the timing tree
 
     @property
     def compute_s(self) -> float:
@@ -81,6 +86,40 @@ class RuntimeResult:
     @property
     def total_s(self) -> float:
         return self.compute_s + self.transfer_s
+
+
+def build_infer_spans(stage_s, hops, splits, *, base: float = 0.0,
+                      clock: str = "wall", tid: str = "runtime") -> Span:
+    """The span tree of one timed split inference.
+
+    The measured per-stage / per-hop durations are laid out back-to-back
+    from ``base`` (a *reconstructed* timeline: ``timeit_blocked`` takes
+    the min over iterations, so the stages were not literally contiguous
+    on the host clock).  By construction the root span's duration equals
+    the sum of its leaves — i.e. it reconciles exactly with
+    ``RuntimeResult.total_s``.
+    """
+    total = sum(stage_s) + sum(h["encode_s"] + h["transfer_s"]
+                               + h["decode_s"] for h in hops)
+    root = Span("infer", base, base + total, clock, tid, "runtime",
+                {"splits": list(splits)})
+    t = base
+    for k, s in enumerate(stage_s):
+        root.children.append(Span(f"stage{k}", t, t + s, clock, tid,
+                                  "runtime", {"k": k}))
+        t += s
+        if k >= len(hops):
+            continue
+        h = hops[k]
+        hop = Span(f"hop{k}", t, t + h["encode_s"] + h["transfer_s"]
+                   + h["decode_s"], clock, tid, "runtime",
+                   {"cut": h["cut"], "bytes": h["bytes"]})
+        root.children.append(hop)
+        for part in ("encode", "transfer", "decode"):
+            d = h[f"{part}_s"]
+            hop.children.append(Span(part, t, t + d, clock, tid, "runtime"))
+            t += d
+    return root
 
 
 class SplitRuntime:
@@ -102,11 +141,13 @@ class SplitRuntime:
     def __init__(self, model, params, split_layer, *,
                  ae: Optional[dict] = None,
                  channel=None, protocol: str = "tcp",
-                 quantize: bool = True, backend: Optional[str] = None):
+                 quantize: bool = True, backend: Optional[str] = None,
+                 obs=None):
         self.part: Partition = make_partition(model, params, split_layer, ae)
         self.channel, self.protocol = channel, protocol
         self.quantize, self.backend = quantize, backend
         self.hops = self._resolve_hops(channel, protocol)
+        self.obs = NULL if obs is None else obs
 
     def _resolve_hops(self, channel, protocol) -> list:
         """Per-hop (protocol, channel) pairs; None entries skip pricing."""
@@ -160,7 +201,7 @@ class SplitRuntime:
                          "encode_s": encode_s, "transfer_s": transfer_s,
                          "decode_s": decode_s, **meta})
         logits = cur
-        return RuntimeResult(
+        result = RuntimeResult(
             np.asarray(logits), self.part.split_layer,
             stage_s[0],
             sum(h["encode_s"] for h in hops),
@@ -171,6 +212,24 @@ class SplitRuntime:
             dict(hops[0]) if len(hops) == 1 else {"hops": hops},
             splits=self.part.splits, stage_s=tuple(stage_s),
             hops=tuple(hops))
+        obs = self.obs
+        if obs.enabled:
+            # anchor the reconstructed timeline so successive infers on
+            # one recorder don't overlap (the real elapsed time, warmup
+            # included, always exceeds the min-estimator total)
+            end = obs.tracer.wall_now()
+            result.trace = build_infer_spans(
+                stage_s, hops, self.part.splits,
+                base=max(0.0, end - result.total_s))
+            obs.tracer.extend(result.trace.walk())
+            for k, s in enumerate(stage_s):
+                obs.metrics.record(labelled("runtime.stage_s", k=k), end, s)
+            for k, h in enumerate(hops):
+                obs.metrics.record(labelled("runtime.hop_bytes", k=k), end,
+                                   h["bytes"])
+        else:
+            result.trace = build_infer_spans(stage_s, hops, self.part.splits)
+        return result
 
     def reference(self, x) -> np.ndarray:
         """Unsplit forward of the same params (equivalence oracle)."""

@@ -1,0 +1,445 @@
+"""Telemetry layer: spans, metrics, Chrome export, null path, and the
+four instrumented subsystems (events, cluster, runtime, planner)."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.fleet.cluster import ClusterConfig, ClusterSim, ClusterStats
+from repro.netsim.events import EventQueue
+from repro.obs import (NULL, Histogram, MetricsRegistry, NullRecorder,
+                       Recorder, Tracer, labelled, latency_buckets)
+from repro.serving.engine import BatchCostModel
+
+
+# ----------------------------------------------------------- chrome schema ----
+def check_chrome_trace(path):
+    """Validate the Chrome trace-event JSON contract Perfetto loads."""
+    with open(path) as f:
+        doc = json.load(f)
+    assert set(doc) == {"traceEvents", "displayTimeUnit"}
+    assert doc["displayTimeUnit"] == "ms"
+    events = doc["traceEvents"]
+    assert events, "empty trace"
+    for e in events:
+        assert e["ph"] in ("X", "i", "M")
+        assert isinstance(e["pid"], int) and isinstance(e["tid"], int)
+        assert isinstance(e["name"], str) and e["name"]
+        if e["ph"] == "X":
+            assert e["ts"] >= 0 and e["dur"] >= 0          # microseconds
+        elif e["ph"] == "i":
+            assert e["ts"] >= 0 and e["s"] == "t"
+        else:
+            assert e["name"] in ("process_name", "thread_name")
+            assert "name" in e["args"]
+    # every (pid, tid) track is named by metadata
+    tracks = {(e["pid"], e["tid"]) for e in events if e["ph"] != "M"}
+    named = {(e["pid"], e["tid"]) for e in events
+             if e["ph"] == "M" and e["name"] == "thread_name"}
+    assert tracks <= named
+    return doc
+
+
+# ------------------------------------------------------------------ tracer ----
+def test_span_nesting_and_walk():
+    tr = Tracer()
+    with tr.span("outer", tid="t", cat="c") as outer:
+        outer.args["k"] = 1
+        with tr.span("inner", tid="t"):
+            pass
+    assert [s.name for s in outer.walk()] == ["outer", "inner"]
+    assert outer.args == {"k": 1}
+    assert outer.children[0].t0 >= outer.t0
+    assert outer.children[0].t1 <= outer.t1 + 1e-9
+    # both spans flat in the tracer, once each
+    assert [s.name for s in tr.spans] == ["outer", "inner"]
+
+
+def test_tracer_add_sim_clock():
+    tr = Tracer()
+    root = tr.add("a", 1.0, 3.0, clock="sim", tid="x", cat="k")
+    tr.add("b", 1.5, 2.0, clock="sim", tid="x", parent=root)
+    assert root.dur == pytest.approx(2.0)
+    assert root.children[0].name == "b"
+
+
+def test_chrome_export_schema_and_determinism(tmp_path):
+    tr = Tracer()
+    r = tr.add("root", 0.0, 1e-3, clock="sim", tid="requests", cat="fleet")
+    tr.add("child", 0.0, 5e-4, clock="sim", tid="requests", parent=r)
+    tr.instant("evt", 2e-4, clock="sim", tid="events")
+    with tr.span("wall-op", tid="main"):
+        pass
+    p1, p2 = tmp_path / "t1.json", tmp_path / "t2.json"
+    tr.to_chrome_trace(str(p1))
+    tr.to_chrome_trace(str(p2))
+    doc = check_chrome_trace(str(p1))
+    assert p1.read_bytes() == p2.read_bytes()          # deterministic
+    pids = {e["pid"] for e in doc["traceEvents"] if e["ph"] != "M"}
+    assert pids == {1, 2}                              # sim + wall clocks
+
+
+def test_chrome_export_clock_filter(tmp_path):
+    tr = Tracer()
+    tr.add("simmy", 0.0, 1.0, clock="sim", tid="a")
+    with tr.span("wally"):
+        pass
+    p = tmp_path / "sim.json"
+    tr.to_chrome_trace(str(p), clock="sim")
+    doc = check_chrome_trace(str(p))
+    names = {e["name"] for e in doc["traceEvents"] if e["ph"] == "X"}
+    assert "simmy" in names and "wally" not in names
+
+
+# ----------------------------------------------------------------- metrics ----
+def test_counter_gauge():
+    m = MetricsRegistry()
+    c = m.counter("x.count")
+    c.inc()
+    c.inc(2.5)
+    g = m.gauge("x.level")
+    g.set(5.0)
+    g.add(-2.0)
+    assert m.snapshot()["x.count"] == pytest.approx(3.5)
+    assert m.snapshot()["x.level"] == pytest.approx(3.0)
+    # get-or-create returns the same instrument; kind conflicts raise
+    assert m.counter("x.count") is c
+    with pytest.raises(TypeError):
+        m.gauge("x.count")
+
+
+def test_histogram_percentiles():
+    h = Histogram("lat", latency_buckets())
+    vals = np.geomspace(1e-4, 1.0, 500)
+    for v in vals:
+        h.observe(float(v))
+    assert h.n == 500
+    assert h.percentile(50) == pytest.approx(np.percentile(vals, 50), rel=0.3)
+    assert h.percentile(99) <= h.vmax * (1 + 1e-9)
+    assert h.percentile(0) >= h.vmin * (1 - 1e-9)
+    h.reset()
+    assert h.n == 0 and np.isnan(h.percentile(50))
+
+
+def test_timeseries_and_labelled():
+    m = MetricsRegistry()
+    assert labelled("runtime.stage_s", k=2) == "runtime.stage_s{k=2}"
+    m.record(labelled("runtime.stage_s", k=2), 0.1, 5.0)
+    m.record(labelled("runtime.stage_s", k=2), 0.2, 6.0)
+    t, v = m.timeseries("runtime.stage_s{k=2}")
+    np.testing.assert_allclose(t, [0.1, 0.2])
+    np.testing.assert_allclose(v, [5.0, 6.0])
+    assert m.timeseries("nope")[0].size == 0
+
+
+# --------------------------------------------------------------- null path ----
+def test_null_recorder_surface():
+    n = NullRecorder()
+    assert not n.enabled and not NULL.enabled
+    with n.tracer.span("x") as sp:
+        sp.args["k"] = 1                               # swallowed, no error
+    n.tracer.add("a", 0, 1)
+    n.tracer.instant("b", 0)
+    n.metrics.counter("c").inc()
+    n.metrics.gauge("g").add(2.0)
+    n.metrics.histogram("h").observe(1.0)
+    n.metrics.record("s", 0.0, 1.0)
+    assert n.metrics.timeseries("s")[0].size == 0
+    assert n.metrics.snapshot() == {}
+    rep = n.report()
+    assert rep.spans == () and rep.series_names() == []
+
+
+def test_queue_default_obs_is_shared_null():
+    assert EventQueue().obs is NULL
+    cost = BatchCostModel(flops_per_item=1e6, flops_per_s=1e11)
+    assert ClusterSim(cost, ClusterConfig()).obs is NULL
+
+
+# ------------------------------------------------- events instrumentation ----
+def test_cancel_after_fire_is_noop():
+    q = EventQueue()
+    fired = []
+    h = q.schedule(1.0, lambda: fired.append(1))
+    q.run()
+    assert fired == [1]
+    h.cancel()                  # already fired: harmless
+    q.schedule(2.0, lambda: fired.append(2))
+    q.run()
+    assert fired == [1, 2] and q.n_fired == 2 and q.n_cancelled == 0
+
+
+def test_run_max_events_exhaustion():
+    q = EventQueue()
+
+    def again():
+        q.schedule(q.now + 1.0, again)
+
+    q.schedule(0.0, again)
+    with pytest.raises(RuntimeError, match="event budget"):
+        q.run(max_events=10)
+    # the traced loop enforces the same budget
+    q2 = EventQueue(obs=Recorder())
+
+    def again2():
+        q2.schedule(q2.now + 1.0, again2)
+
+    q2.schedule(0.0, again2)
+    with pytest.raises(RuntimeError, match="event budget"):
+        q2.run(max_events=10)
+
+
+def test_cancelled_events_counted_never_spanned():
+    rec = Recorder()
+    q = EventQueue(obs=rec)
+    q.schedule_named(1.0, lambda: None, "keep")
+    q.schedule_named(2.0, lambda: None, "drop").cancel()
+    q.run()
+    names = [s.name for s in rec.tracer.spans]
+    assert "keep" in names and "drop" not in names
+    snap = rec.metrics.snapshot()
+    assert snap["events.fired"] == 1 and snap["events.cancelled"] == 1
+    assert q.n_fired == 1 and q.n_cancelled == 1
+
+
+def test_event_chain_span_wraps_run():
+    rec = Recorder()
+    q = EventQueue(obs=rec)
+    q.schedule(0.5, lambda: None)
+    q.schedule(1.5, lambda: None)
+    q.run()
+    chains = [s for s in rec.tracer.spans if s.name == "event-chain"]
+    assert len(chains) == 1
+    assert chains[0].args["n_events"] == 2
+    assert chains[0].t1 == pytest.approx(1.5)
+
+
+def test_traced_and_null_runs_agree():
+    def drive(q):
+        out = []
+        for i in range(20):
+            h = q.schedule_named(0.1 * (i + 1), lambda i=i: out.append(i),
+                                 f"e{i}")
+            if i % 3 == 0:
+                h.cancel()
+        q.run()
+        return out, q.now
+
+    assert drive(EventQueue()) == drive(EventQueue(obs=Recorder()))
+
+
+# ------------------------------------------------ cluster instrumentation ----
+def test_cluster_stats_empty_run_nan():
+    s = ClusterStats()
+    assert np.isnan(s.percentile(50))
+    assert np.isnan(s.percentile(99))
+    assert np.isnan(s.mean_batch())
+    assert s.drop_fraction() == 0.0
+
+
+@pytest.fixture()
+def traced_cluster():
+    cost = BatchCostModel(flops_per_item=5e6, flops_per_s=1e11)
+    rec = Recorder(window_s=0.01)
+    sim = ClusterSim(cost, ClusterConfig(n_replicas=2, max_batch=4), obs=rec)
+    t = np.cumsum(np.random.default_rng(0).exponential(1 / 400.0, 150))
+    for i, ti in enumerate(t):
+        sim.offer(i, float(ti), tx_s=1e-4, tx_bytes=1024)
+    stats = sim.run()
+    return rec, sim, stats
+
+
+def test_cluster_request_lifecycle_spans(traced_cluster):
+    rec, sim, stats = traced_cluster
+    reqs = [s for s in rec.tracer.spans if s.name == "request"]
+    assert len(reqs) == len(stats.served) == 150
+    by_rid = {r.args["rid"]: r for r in reqs}
+    for r in stats.served:
+        span = by_rid[r.rid]
+        parts = {c.name: c for c in span.children}
+        assert "service" in parts and "wire" in parts
+        # children tile the request span exactly
+        assert sum(c.dur for c in span.children) == pytest.approx(span.dur)
+        assert parts["service"].dur == pytest.approx(r.t_done - r.t_dispatch)
+    # batch spans land on per-replica tracks
+    tids = {s.tid for s in rec.tracer.spans if s.name.startswith("batch[")}
+    assert tids <= {"replica0", "replica1"} and tids
+
+
+def test_cluster_windowed_series(traced_cluster):
+    rec, sim, stats = traced_cluster
+    rep = rec.report()
+    for name in ("fleet.arrival_rate_hz", "fleet.queue_depth",
+                 "fleet.drop_fraction", "fleet.utilization",
+                 "fleet.inflight_bytes", "fleet.latency_p50_s",
+                 "fleet.latency_p99_s"):
+        t, v = rep.timeseries(name)
+        assert len(t) > 3, name
+        assert np.all(np.diff(t) > 0), name
+    # arrivals counter reconciles with the simulation
+    assert rec.metrics.snapshot()["fleet.arrivals"] == 150
+    assert rec.metrics.snapshot()["fleet.served"] == 150
+    # inflight bytes returns to zero once everything arrived
+    _, inflight = rep.timeseries("fleet.inflight_bytes")
+    assert inflight[-1] == 0
+
+
+def test_cluster_trace_bit_reproducible(tmp_path):
+    def once(path):
+        cost = BatchCostModel(flops_per_item=5e6, flops_per_s=1e11)
+        rec = Recorder(window_s=0.01)
+        sim = ClusterSim(cost, ClusterConfig(n_replicas=2, max_batch=4),
+                         obs=rec)
+        t = np.cumsum(np.random.default_rng(7).exponential(1 / 300.0, 80))
+        for i, ti in enumerate(t):
+            sim.offer(i, float(ti))
+        sim.run()
+        rec.report().to_chrome_trace(path, clock="sim")
+
+    p1, p2 = str(tmp_path / "a.json"), str(tmp_path / "b.json")
+    once(p1)
+    once(p2)
+    assert open(p1, "rb").read() == open(p2, "rb").read()
+    check_chrome_trace(p1)
+
+
+def test_cluster_untraced_matches_traced_simulation():
+    """Telemetry must not perturb the simulation itself."""
+    def once(obs):
+        cost = BatchCostModel(flops_per_item=5e6, flops_per_s=1e11)
+        sim = ClusterSim(cost, ClusterConfig(n_replicas=2, max_batch=4,
+                                             queue_limit=8), obs=obs)
+        t = np.cumsum(np.random.default_rng(3).exponential(1 / 2000.0, 300))
+        for i, ti in enumerate(t):
+            sim.offer(i, float(ti))
+        s = sim.run()
+        return (len(s.served), s.dropped, s.batches,
+                [(r.rid, r.t_dispatch, r.t_done) for r in s.served])
+
+    assert once(None) == once(Recorder())
+
+
+# ------------------------------------------------ runtime instrumentation ----
+@pytest.fixture(scope="module")
+def observed_infer():
+    from repro.api import Study
+
+    study = Study("vgg16", seed=0)
+    report = study.observe(window_s=0.02)
+    rt = study.deploy(candidate="SC@8")
+    x = np.asarray(study._x[:2])
+    result = rt.infer(x, iters=2)
+    return study, report, result
+
+
+def test_runtime_span_tree_reconciles(observed_infer):
+    study, report, result = observed_infer
+    root = result.trace
+    assert root is not None and root.name == "infer"
+    leaves = [s for s in root.walk() if not s.children and s is not root]
+    total = sum(s.dur for s in leaves)
+    assert abs(root.dur - result.total_s) <= 0.01 * result.total_s
+    assert abs(total - result.total_s) <= 0.01 * result.total_s
+    kinds = {c.name for c in root.children}
+    assert any(k.startswith("stage") for k in kinds)
+    assert any(k.startswith("hop") for k in kinds)
+    hop = next(c for c in root.children if c.name.startswith("hop"))
+    assert [g.name for g in hop.children] == ["encode", "transfer", "decode"]
+
+
+def test_runtime_series_and_chrome_export(observed_infer, tmp_path):
+    study, report, result = observed_infer
+    assert "runtime.stage_s{k=0}" in report.series_names()
+    _, v = report.timeseries("runtime.stage_s{k=0}")
+    assert v[-1] > 0
+    p = str(tmp_path / "rt.json")
+    report.to_chrome_trace(p)
+    doc = check_chrome_trace(p)
+    names = {e["name"] for e in doc["traceEvents"] if e["ph"] == "X"}
+    assert {"infer", "encode", "transfer", "decode"} <= names
+
+
+def test_runtime_trace_built_even_without_obs(vgg_small):
+    from repro.runtime.engine import SplitRuntime
+    model, params = vgg_small
+    rt = SplitRuntime(model, params, model.cut_points()[1])
+    x = np.random.default_rng(0).standard_normal(
+        (2,) + tuple(model.input_shape)).astype(np.float32)
+    res = rt.infer(x, iters=1)
+    assert res.trace is not None
+    assert res.trace.dur == pytest.approx(res.total_s)
+
+
+# ------------------------------------------------ planner instrumentation ----
+def test_plan_tiers_phase_spans(vgg_small):
+    from repro.fleet.planner import Tier, TierTopology, plan_tiers
+    from repro.netsim.channel import Channel
+    model, params = vgg_small
+    topo = TierTopology((
+        Tier("edge", "edge-embedded", Channel(1e-3, 20e6, 20e6, seed=1)),
+        Tier("cloud", "server-gpu"),
+    ))
+    rec = Recorder()
+    plans = plan_tiers(model, params, topo, refine=4, obs=rec)
+    assert plans
+    spans = {s.name: s for s in rec.tracer.spans if s.cat == "planner"}
+    assert set(spans) == {"planner.screen", "planner.refine"}
+    assert spans["planner.screen"].args["n_combos"] >= len(plans)
+    assert spans["planner.refine"].args["n_refined"] >= 1
+    snap = rec.metrics.snapshot()
+    assert snap["planner.screen_combos"] == spans["planner.screen"].args[
+        "n_combos"]
+    assert snap["planner.refined_plans"] >= 1
+    # wall spans are ordered: screen strictly before refine
+    assert spans["planner.screen"].t1 <= spans["planner.refine"].t0 + 1e-9
+
+
+# --------------------------------------------------- end-to-end via Study ----
+def test_study_observe_fleet_and_runtime(tmp_path):
+    """The acceptance path: one report covering a fleet simulation and a
+    live infer, exported as schema-valid Chrome JSON."""
+    from repro.api import Study
+    from repro.fleet.cluster import ClusterConfig, ClusterSim
+    from repro.serving.engine import BatchCostModel
+
+    study = Study("vgg16", seed=0)
+    report = study.observe(window_s=0.01)
+    assert study.observe() is not None                 # idempotent re-arm
+
+    # fleet half: a cluster on the shared recorder
+    cut = study.model.cut_points()[2]
+    cost = BatchCostModel.for_split(study.model, study.params, cut,
+                                    study.scenario.server)
+    sim = ClusterSim(cost, ClusterConfig(n_replicas=2, max_batch=8),
+                     obs=report.recorder)
+    t = np.cumsum(np.random.default_rng(1).exponential(1 / 500.0, 120))
+    for i, ti in enumerate(t):
+        sim.offer(i, float(ti), tx_s=2e-4, tx_bytes=study.input_bytes)
+    stats = sim.run()
+    assert len(stats.served) == 120
+
+    # runtime half: a real infer through the same study
+    rt = study.deploy(candidate=f"SC@{cut}")
+    res = rt.infer(np.asarray(study._x[:2]), iters=2)
+    assert abs(res.trace.dur - res.total_s) <= 0.01 * res.total_s
+
+    p = str(tmp_path / "study.json")
+    report.to_chrome_trace(p)
+    doc = check_chrome_trace(p)
+    names = {e["name"] for e in doc["traceEvents"]}
+    assert "request" in names and "infer" in names
+    assert len(report.spans) > 150
+    assert "fleet.queue_depth" in report.series_names()
+    assert "runtime.stage_s{k=0}" in report.series_names()
+    # summary renders without error and mentions both subsystems
+    text = report.summary()
+    assert "fleet" in text and "spans" in text
+
+
+def test_trace_seed_provenance():
+    from repro.fleet.traffic import DeviceClass, generate_trace
+    from repro.netsim.channel import Channel
+    mix = [DeviceClass.make("mcu", Channel(1e-3, 10e6, 10e6, seed=1))]
+    tr = generate_trace(mix, 10, 100.0, seed=123)
+    assert tr.seed == 123
+    assert tr.for_device("mcu").seed == 123
