@@ -67,6 +67,19 @@ GATE_SPECS = {
         ("plan_tiers.e2e_ms", "lower", 1.50, None),
         ("verify.max_rel_err", "lower", float("inf"), 1e-9),
     ],
+    # the megafleet vectorized cluster engine.  The clients-ratio is a
+    # wall-clock ratio of two back-to-back timings, so (as with the
+    # planner speedup) the hard >=20x acceptance floor lives inside
+    # bench_megafleet --quick and the ratio is reported, not gated.
+    # What gates: the seeded drop fractions and tail latency — the
+    # vectorized engine is an exact replay of the event engine, so these
+    # are deterministic and any drift is a semantics change, not noise
+    "megafleet": [
+        ("workloads.poisson_2x.drop_fraction", "lower", 0.001, None),
+        ("workloads.poisson_2x.p99_ms", "lower", 0.001, None),
+        ("workloads.diurnal.drop_fraction", "lower", 0.001, None),
+        ("workloads.diurnal.p99_ms", "lower", 0.001, None),
+    ],
     # telemetry must be free when off and cheap when on: both overheads
     # are paired-ratio medians of two wall clocks (bench_obs measures A
     # and B back-to-back per pair so host drift cancels), gated on hard

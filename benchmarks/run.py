@@ -22,6 +22,7 @@ SECTIONS = {
     "api": "benchmarks.bench_api",
     "pipeline": "benchmarks.bench_pipeline",
     "planner": "benchmarks.bench_planner",
+    "megafleet": "benchmarks.bench_megafleet",
     "obs": "benchmarks.bench_obs",
     "roofline": "benchmarks.roofline",
     # needs >=32 emulated devices; standalone: python -m benchmarks.bench_multipod_wire

@@ -1,0 +1,125 @@
+"""Capacity-plan a million-client fleet in seconds: screen replica
+counts with the vectorized cluster engine, refine the winner exactly,
+and export the telemetry to Perfetto.
+
+The fleet stack has two cluster engines behind one interface:
+
+* ``ClusterSim`` (the event engine) — the semantic authority.  One
+  Python event per arrival/dispatch/completion: exact, observable, and
+  ~10^5 requests/s.
+* ``simulate_cluster_vectorized`` — the same admission-queue +
+  dynamic-batching + replica dynamics replayed arrival-level in NumPy:
+  identical drop decisions and latencies, ~10^7 requests/s.
+
+That 100x gap is what makes this walkthrough possible: a full diurnal
+day of a million clients is screened per candidate in well under a
+second, then the chosen plan is re-checked against the event engine on
+a slice (``check_event_engine=True`` asserts exact drop/batch/served
+counts and percentile agreement), so the fast path never gets to be
+quietly wrong.
+
+  1. generate a 10^6-request diurnal trace (vectorized thinning),
+  2. screen n_replicas in 2..9 with streaming stats (O(histogram)
+     memory — no per-request arrays at the megafleet scale),
+  3. pick the smallest cluster meeting the QoS (drop <1%, p99 < 60 ms),
+  4. refine: re-run a slice through BOTH engines and assert agreement,
+  5. re-run the winner under a Recorder: windowed ``fleet.*`` series +
+     a Perfetto trace at ``results/megafleet/trace.json``.
+
+Run:  PYTHONPATH=src python examples/megafleet.py [--quick]
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.fleet.cluster import ClusterConfig, ClusterSim
+from repro.fleet.traffic import diurnal_arrivals
+from repro.fleet.vectorized import simulate_cluster_vectorized
+from repro.obs import Recorder
+from repro.serving.engine import BatchCostModel
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
+                       "megafleet")
+COST = BatchCostModel(flops_per_item=5e9, flops_per_s=60e12,
+                      fixed_overhead_s=2e-4)
+QOS_DROP, QOS_P99_S = 0.01, 0.060
+
+
+def _cfg(k: int) -> ClusterConfig:
+    return ClusterConfig(n_replicas=k, max_batch=64, batch_window_s=2e-3,
+                         queue_limit=8192)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="10^5 clients instead of 10^6 (CI smoke)")
+    args = ap.parse_args()
+    n = 100_000 if args.quick else 1_000_000
+
+    print("== 1. the fleet ==")
+    # mean rate sized so the smallest candidate drowns and the largest
+    # coasts: ~1.3x the 3-replica capacity at the diurnal mean
+    per_replica = _cfg(1).max_batch / COST.service_time(_cfg(1).max_batch)
+    rate = 4.0 * per_replica
+    times = diurnal_arrivals(rate, n, np.random.default_rng(42),
+                             period_s=max(4.0, n / rate / 2.0), depth=0.8)
+    print(f"   {n:,} requests over {times[-1]:.1f} s, mean "
+          f"{n / times[-1]:,.0f} req/s (one replica serves "
+          f"{per_replica:,.0f} req/s)")
+
+    print("== 2. screen replica counts (vectorized, streaming) ==")
+    chosen = None
+    for k in range(2, 10):
+        stats = simulate_cluster_vectorized(times, COST, _cfg(k),
+                                            streaming=True)
+        drop, p99 = stats.drop_fraction(), stats.percentile(99.0)
+        ok = drop < QOS_DROP and p99 < QOS_P99_S
+        print(f"   n_replicas={k}: drop {drop:7.2%}  p99 {p99 * 1e3:7.2f} ms"
+              f"  {'<- meets QoS' if ok and chosen is None else ''}")
+        if ok and chosen is None:
+            chosen = k
+    if chosen is None:
+        raise SystemExit("no candidate met the QoS — widen the sweep")
+
+    print(f"== 3. refine n_replicas={chosen} against the event engine ==")
+    n_slice = min(n, 20_000)
+    simulate_cluster_vectorized(times[:n_slice], COST, _cfg(chosen),
+                                check_event_engine=True)
+    print(f"   {n_slice:,}-request slice: drop/batch/served counts exact, "
+          f"percentiles within the 1e-6 contract")
+
+    print("== 4. telemetry run + Perfetto export ==")
+    rec = Recorder(window_s=times[-1] / 400.0)
+    stats = simulate_cluster_vectorized(times, COST, _cfg(chosen), obs=rec)
+    report = rec.report()
+    t, depth = report.timeseries("fleet.queue_depth")
+    _, util = report.timeseries("fleet.utilization")
+    print(f"   served {stats.n_served:,} / {n:,} "
+          f"(drop {stats.drop_fraction():.2%}), p99 "
+          f"{stats.percentile(99.0) * 1e3:.2f} ms")
+    print(f"   windowed series: {len(t)} samples, max queue depth "
+          f"{depth.max():.0f}, mean utilization {util.mean():.1%}")
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = os.path.join(OUT_DIR, "trace.json")
+    report.to_chrome_trace(path, clock="sim",
+                           metadata={"n_requests": n, "seed": 42,
+                                     "n_replicas": chosen})
+    print(f"   {path} (open in https://ui.perfetto.dev)")
+
+    # sanity for CI: the cheaper-by-one cluster must NOT meet the QoS —
+    # the walkthrough demonstrates a real capacity cliff, not headroom
+    under = simulate_cluster_vectorized(times, COST, _cfg(chosen - 1),
+                                        streaming=True)
+    assert (under.drop_fraction() >= QOS_DROP
+            or under.percentile(99.0) >= QOS_P99_S)
+    print(f"   (n_replicas={chosen - 1} fails the QoS — {chosen} is the "
+          f"capacity cliff, not headroom)")
+
+
+if __name__ == "__main__":
+    main()

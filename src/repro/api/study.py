@@ -132,6 +132,7 @@ class Study:
         self._verdicts = None
         self._planner = None
         self._fleet = None
+        self._fleet_engine = "event"     # cluster engine of the last fleet sim
         self._points = None
         self._suggested = None
         self._plans = None
@@ -405,6 +406,7 @@ class Study:
                  n_frames: Optional[int] = None, tiers=None,
                  n_micro: int = 4, top_m: int = 8,
                  batch: Optional[int] = None, refine: Optional[int] = None,
+                 engine: str = "event",
                  space=None, **space_overrides) -> "Study":
         """Stage 3: communication-aware simulation of every candidate.
 
@@ -436,11 +438,19 @@ class Study:
         (``netsim.analytic``) and evaluate only the per-device Pareto
         front + ``refine`` fastest legs exactly; ``None`` (default)
         evaluates everything exactly.
+
+        ``engine`` (fleet mode): the cluster simulator pricing each
+        grid point — ``"event"`` (default, exact), ``"vectorized"``
+        (the arrival-level NumPy engine; megafleet-scale traces), or
+        ``"auto"``.  Non-event engines follow the screen/refine
+        contract: Pareto-front points are re-priced by the event engine
+        before :meth:`suggest` can choose them, and the observed
+        deployment run inherits the same engine choice.
         """
         n_frames = self.scenario.n_frames if n_frames is None else n_frames
         if fleet is not None:
             return self._simulate_fleet(fleet, n_frames, space,
-                                        space_overrides, refine)
+                                        space_overrides, refine, engine)
         if path is not None:
             return self._simulate_path(path, tiers, n_frames, n_micro,
                                        top_m, batch)
@@ -538,7 +548,7 @@ class Study:
         return accuracy_fn
 
     def _simulate_fleet(self, fleet, n_frames, space, overrides,
-                        refine=None) -> "Study":
+                        refine=None, engine="event") -> "Study":
         from repro.fleet.planner import DeploymentPlanner, SearchSpace
         trace, devices = fleet
         measured = self._data is not None and self.cfg is None
@@ -560,8 +570,9 @@ class Study:
             kw.update(overrides)
             space = SearchSpace(**kw)
         self._fleet, self._space = (trace, devices), space
+        self._fleet_engine = engine
         self._points = self._planner.search(trace, devices, space,
-                                            refine=refine)
+                                            refine=refine, engine=engine)
         self._mode = "fleet"
         self._path = None
         self._suggested = self._plans = self._tier_best = None
@@ -659,7 +670,7 @@ class Study:
                 trace, devices = self._fleet
                 self._deployment_stats = simulate_deployment(
                     self._plans, trace, devices, self._planner,
-                    obs=self._recorder)
+                    obs=self._recorder, engine=self._fleet_engine)
             return self._plans
         best = Q.suggest(self.verdicts, qos)
         self._suggested = best

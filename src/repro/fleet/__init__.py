@@ -4,6 +4,9 @@ QoS-aware deployment planner (which splits for this *population*)."""
 from .traffic import (ARRIVAL_PATTERNS, DeviceClass, FleetRequest,  # noqa: F401
                       Trace, generate_trace)
 from .cluster import ClusterConfig, ClusterSim, ClusterStats        # noqa: F401
+from .vectorized import (PCTL_RTOL, StreamingClusterStats,          # noqa: F401
+                         VectorClusterStats, VectorizedClusterSim,
+                         fluid_cluster_stats, simulate_cluster_vectorized)
 from .planner import (DeploymentPlanner, PlanPoint, SearchSpace,    # noqa: F401
                       Tier, TierPlan, TierTopology, plan_tiers,
                       simulate_deployment, suggest_tier_plan)

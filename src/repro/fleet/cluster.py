@@ -142,9 +142,18 @@ class ClusterSim:
                               "arrival")
 
     def offer_trace(self, arrivals) -> None:
-        """arrivals: iterable of (rid, t_arrival)."""
-        for rid, t in arrivals:
-            self.offer(rid, t)
+        """arrivals: iterable of ``(rid, t_arrival)`` or
+        ``(rid, t_arrival, tx_s, tx_bytes)`` rows.  The 4-field form
+        forwards the wire metadata :meth:`offer` supports — without it,
+        trace-driven runs silently lost the ``wire`` span and the
+        ``fleet.inflight_bytes`` gauge."""
+        for row in arrivals:
+            if len(row) == 2:
+                rid, t = row
+                self.offer(rid, t)
+            else:
+                rid, t, tx_s, tx_bytes = row
+                self.offer(rid, t, tx_s=tx_s, tx_bytes=int(tx_bytes))
 
     def run(self, until: float = float("inf")) -> ClusterStats:
         if self.obs.enabled and not self._sampling and not self.q.empty():

@@ -24,6 +24,13 @@ Pareto-front + top-K shortlist is re-priced by the discrete-event engine
 (``netsim.simulator.simulate_pipeline`` / ``measure_flow``), which stays
 the single semantic authority: refinement asserts the closed form agrees
 to 1e-9 relative on loss-free paths.
+
+The *cluster* leg follows the same contract: ``search`` and
+:func:`simulate_deployment` take ``engine="event"|"vectorized"|"auto"``
+— the arrival-level NumPy engine (``fleet.vectorized``) prices megafleet
+traces orders of magnitude faster, the event engine remains the
+authority, and any Pareto-front point screened vectorized is re-priced
+exactly before it can be chosen.
 """
 from __future__ import annotations
 
@@ -43,6 +50,7 @@ from repro.core.scenarios import (PLATFORMS, PlatformProfile, Scenario,
 from repro.core.split import legal_cut_lists, legal_cuts
 from repro.fleet.cluster import ClusterConfig, ClusterSim
 from repro.fleet.traffic import DeviceClass, Trace
+from repro.fleet.vectorized import simulate_cluster_vectorized
 from repro.netsim import analytic
 from repro.netsim.channel import Channel, compose_channels
 from repro.netsim.simulator import (ApplicationSimulator, NetworkConfig,
@@ -50,6 +58,25 @@ from repro.netsim.simulator import (ApplicationSimulator, NetworkConfig,
                                     simulate_pipeline)
 from repro.obs import NULL
 from repro.serving.engine import BatchCostModel
+
+
+# requests per cluster above which engine="auto" switches from the exact
+# event engine to the vectorized arrival-level engine (below it the event
+# engine is both authoritative and fast enough)
+AUTO_VECTORIZE_MIN = 20_000
+
+CLUSTER_ENGINES = ("event", "vectorized", "auto")
+
+
+def _resolve_engine(engine: str, n_requests: int) -> str:
+    """'event' or 'vectorized' for a concrete run of ``n_requests``."""
+    if engine not in CLUSTER_ENGINES:
+        raise ValueError(f"engine must be one of {CLUSTER_ENGINES}, "
+                         f"got {engine!r}")
+    if engine == "auto":
+        return ("vectorized" if n_requests >= AUTO_VECTORIZE_MIN
+                else "event")
+    return engine
 
 
 @dataclass(frozen=True)
@@ -405,6 +432,7 @@ class PlanPoint:
     server_flops_per_s: float
     drop_fraction: float
     batch_window_s: float = 0.0      # window the point was simulated under
+    engine: str = "event"            # cluster engine that priced this point
 
     def objectives(self) -> tuple:
         """Minimised objective vector for the Pareto filter."""
@@ -641,8 +669,8 @@ class DeploymentPlanner:
 
     # ------------------------------------------------------------ search ----
     def search(self, trace: Trace, devices: Sequence[DeviceClass],
-               space: SearchSpace, *,
-               refine: Optional[int] = None) -> list:
+               space: SearchSpace, *, refine: Optional[int] = None,
+               engine: str = "event") -> list:
         """Evaluate the space; returns one PlanPoint per evaluated combo.
 
         ``refine=None`` (default) evaluates every combination exactly,
@@ -655,9 +683,22 @@ class DeploymentPlanner:
         queueing simulation over the full batch x replicas grid).  The
         screen is loss-blind, so on lossy channels prefer a ``k`` wide
         enough to keep the retransmission-sensitive alternatives in.
+
+        ``engine`` picks the cluster simulator pricing each grid point:
+        ``"event"`` (default — the exact discrete-event authority),
+        ``"vectorized"`` (the arrival-level NumPy engine in
+        ``fleet.vectorized``; bit-identical latencies under the
+        deterministic service model, orders of magnitude faster on
+        megafleet traces), or ``"auto"`` (vectorized above
+        ``AUTO_VECTORIZE_MIN`` requests per cluster).  Under a
+        non-event engine the search follows the repo's screen/refine
+        contract: the whole grid is priced vectorized, then every
+        point on the per-device Pareto front is re-priced by the event
+        engine (``PlanPoint.engine`` records which simulator produced
+        each number).
         """
         obs = self.obs
-        points = []
+        points, recipes = [], []
         for device in devices:
             sub = trace.for_device(device.name)
             if not len(sub):
@@ -671,6 +712,7 @@ class DeploymentPlanner:
             for label, split in cands:
                 if label == "LC":
                     points.append(self._lc_point(device, sub))
+                    recipes.append(None)
                     continue
                 for proto in space.protocols:
                     if proto not in device.protocols:
@@ -680,9 +722,11 @@ class DeploymentPlanner:
                     flow = self._flow(device, label, split, proto)
                     for b, r in itertools.product(space.batch_sizes,
                                                   space.replica_counts):
-                        points.append(self._cluster_point(
-                            device, sub, label, split, proto, flow,
-                            b, r, space.batch_window_s))
+                        args = (device, sub, label, split, proto, flow,
+                                b, r, space.batch_window_s)
+                        points.append(self._cluster_point(*args,
+                                                          engine=engine))
+                        recipes.append(args)
             if obs.enabled:
                 n_dev = len(points) - n_before
                 obs.tracer.add(f"planner.search:{device.name}", t_dev0,
@@ -692,7 +736,27 @@ class DeploymentPlanner:
                                      "n_requests": len(sub),
                                      "screened": allowed is not None})
                 obs.metrics.counter("planner.evaluated_points").inc(n_dev)
+        if engine != "event":
+            self._refine_front(points, recipes)
         return points
+
+    def _refine_front(self, points: list, recipes: list) -> None:
+        """Screen/refine contract for the cluster engine: re-price every
+        vectorized-screened point on the per-device Pareto front with the
+        exact event engine, in place.  (The vectorized engine replays the
+        event semantics exactly under the deterministic service model, so
+        this normally changes nothing — it is the standing guarantee that
+        no plan is ever *chosen* on a fast-path price alone.)"""
+        index = {id(p): i for i, p in enumerate(points)}
+        n_ref = 0
+        for p in self.pareto_front(points):
+            i = index[id(p)]
+            if recipes[i] is None or points[i].engine == "event":
+                continue
+            points[i] = self._cluster_point(*recipes[i], engine="event")
+            n_ref += 1
+        if self.obs.enabled and n_ref:
+            self.obs.metrics.counter("planner.refined_points").inc(n_ref)
 
     def _lc_point(self, device: DeviceClass, sub: Trace) -> PlanPoint:
         """All-edge: no queueing, no server FLOPs, LC-model accuracy."""
@@ -703,29 +767,41 @@ class DeploymentPlanner:
 
     def _cluster_point(self, device: DeviceClass, sub: Trace, label: str,
                        split: Optional[int], proto: str, flow: dict,
-                       max_batch: int, n_replicas: int,
-                       window_s: float) -> PlanPoint:
+                       max_batch: int, n_replicas: int, window_s: float,
+                       engine: str = "event") -> PlanPoint:
         cost = self._cost_model(split)
-        sim = ClusterSim(cost, ClusterConfig(n_replicas, max_batch, window_s))
-        wire = flow["wire_s"]
-        # request i reaches the cluster after its edge compute + its own
-        # transfer draw (frames cycled, matching ApplicationSimulator)
-        t_server = {}
-        for i, req in enumerate(sub.requests):
-            pre = flow["edge_s"] + wire[i % len(wire)]
-            t_server[req.rid] = pre
-            sim.offer(req.rid, req.t_arrival + pre)
-        stats = sim.run()
-        lat = np.array([t_server[rec.rid] + rec.latency_s
-                        for rec in stats.served])
+        cfg = ClusterConfig(n_replicas, max_batch, window_s)
+        engine = _resolve_engine(engine, len(sub))
         horizon = max(sub.horizon_s, 1e-9)
-        flops_rate = cost.flops_per_item * len(stats.served) / horizon
+        if engine == "vectorized":
+            # request i reaches the cluster after its edge compute + its
+            # own transfer draw (frames cycled, matching the event path)
+            t_arr = sub.arrival_times()
+            wire = np.asarray(flow["wire_s"], float)
+            pre = flow["edge_s"] + wire[np.arange(len(t_arr)) % len(wire)]
+            vstats = simulate_cluster_vectorized(t_arr + pre, cost, cfg)
+            keep = ~vstats.drop_mask
+            lat = pre[keep] + (vstats.t_done[keep] - vstats.t_offer[keep])
+            n_served, drop = vstats.n_served, vstats.drop_fraction()
+        else:
+            sim = ClusterSim(cost, cfg)
+            wire = flow["wire_s"]
+            t_server = {}
+            for i, req in enumerate(sub.requests):
+                pre = flow["edge_s"] + wire[i % len(wire)]
+                t_server[req.rid] = pre
+                sim.offer(req.rid, req.t_arrival + pre)
+            stats = sim.run()
+            lat = np.array([t_server[rec.rid] + rec.latency_s
+                            for rec in stats.served])
+            n_served, drop = len(stats.served), stats.drop_fraction()
+        flops_rate = cost.flops_per_item * n_served / horizon
         return PlanPoint(
             device.name, label, split, proto, max_batch, n_replicas,
             float(np.percentile(lat, 50)) if len(lat) else float("inf"),
             float(np.percentile(lat, 99)) if len(lat) else float("inf"),
-            flow["accuracy"], flops_rate, stats.drop_fraction(),
-            batch_window_s=window_s)
+            flow["accuracy"], flops_rate, drop,
+            batch_window_s=window_s, engine=engine)
 
     # ------------------------------------------------------------ output ----
     @staticmethod
@@ -777,18 +853,28 @@ class DeploymentPlanner:
 
 def simulate_deployment(plans: dict, trace: Trace,
                         devices: Sequence[DeviceClass],
-                        planner: DeploymentPlanner, *, obs=None) -> dict:
+                        planner: DeploymentPlanner, *, obs=None,
+                        engine: str = "event",
+                        check_event_engine: bool = False) -> dict:
     """Joint validation: run the chosen per-class plans against the *mixed*
     trace, sharing one cluster per (split, batch, replicas) group so device
     classes genuinely contend for the same replicas.  Each group runs under
     the batching window its plans were searched with.  Returns fleet-level
-    p50/p99 per group.
+    p50/p99 per group (each row records the ``engine`` that produced it).
+
+    ``engine``: ``"event"`` (default), ``"vectorized"``, or ``"auto"``
+    (vectorized above ``AUTO_VECTORIZE_MIN`` requests per group) — the
+    same knob as :meth:`DeploymentPlanner.search`.  With
+    ``check_event_engine=True`` a vectorized group is additionally
+    replayed by the event engine and asserted to agree (exact drop
+    counts, percentiles within ``fleet.vectorized.PCTL_RTOL``).
 
     ``obs``: the shared clusters run fully traced — per-request lifecycle
     spans (wire -> queue wait -> service), per-replica batch tracks, and
-    the windowed fleet time series.  This is *the* fleet simulation
-    ``Study.observe()`` exports: the deployment you actually chose, under
-    the mixed trace."""
+    the windowed fleet time series (the vectorized engine feeds the same
+    ``fleet.*`` series from its arrival arrays).  This is *the* fleet
+    simulation ``Study.observe()`` exports: the deployment you actually
+    chose, under the mixed trace."""
     obs = NULL if obs is None else obs
     by_dev = {d.name: d for d in devices}
     groups = {}
@@ -801,29 +887,64 @@ def simulate_deployment(plans: dict, trace: Trace,
     out = {}
     for (split, b, r, window_s), members in groups.items():
         cost = planner._cost_model(split)
-        sim = ClusterSim(cost, ClusterConfig(r, b, window_s), obs=obs)
-        pre = {}
-        for plan in members:
-            device = by_dev[plan.device]
-            flow = planner._flow(device, plan.label, plan.split_layer,
-                                 plan.protocol)
-            sub = trace.for_device(plan.device)
-            wire_bytes = int(flow.get("wire_bytes", 0))
-            for i, req in enumerate(sub.requests):
-                wire = flow["wire_s"][i % len(flow["wire_s"])]
-                head = flow["edge_s"] + wire
-                pre[req.rid] = head
-                sim.offer(req.rid, req.t_arrival + head,
-                          tx_s=wire, tx_bytes=wire_bytes)
-        stats = sim.run()
-        lat = np.array([pre[rec.rid] + rec.latency_s for rec in stats.served])
+        cfg = ClusterConfig(r, b, window_s)
+        n_group = sum(len(trace.for_device(p.device)) for p in members)
+        eng = _resolve_engine(engine, n_group)
+        if eng == "vectorized":
+            t_parts, pre_parts, txs_parts, txb_parts = [], [], [], []
+            for plan in members:
+                device = by_dev[plan.device]
+                flow = planner._flow(device, plan.label, plan.split_layer,
+                                     plan.protocol)
+                sub = trace.for_device(plan.device)
+                t_arr = sub.arrival_times()
+                wire = np.asarray(flow["wire_s"], float)
+                wire = wire[np.arange(len(t_arr)) % len(wire)]
+                t_parts.append(t_arr)
+                pre_parts.append(flow["edge_s"] + wire)
+                txs_parts.append(wire)
+                txb_parts.append(np.full(len(t_arr),
+                                         int(flow.get("wire_bytes", 0))))
+            t_all = np.concatenate(t_parts)
+            pre = np.concatenate(pre_parts)
+            vstats = simulate_cluster_vectorized(
+                t_all + pre, cost, cfg, tx_s=np.concatenate(txs_parts),
+                tx_bytes=np.concatenate(txb_parts), obs=obs,
+                check_event_engine=check_event_engine)
+            keep = ~vstats.drop_mask
+            lat = pre[keep] + (vstats.t_done[keep] - vstats.t_offer[keep])
+            n_served, drop = vstats.n_served, vstats.drop_fraction()
+            mean_batch = vstats.mean_batch()
+            util = vstats.utilization(r, trace.horizon_s)
+        else:
+            sim = ClusterSim(cost, cfg, obs=obs)
+            pre = {}
+            for plan in members:
+                device = by_dev[plan.device]
+                flow = planner._flow(device, plan.label, plan.split_layer,
+                                     plan.protocol)
+                sub = trace.for_device(plan.device)
+                wire_bytes = int(flow.get("wire_bytes", 0))
+                for i, req in enumerate(sub.requests):
+                    wire = flow["wire_s"][i % len(flow["wire_s"])]
+                    head = flow["edge_s"] + wire
+                    pre[req.rid] = head
+                    sim.offer(req.rid, req.t_arrival + head,
+                              tx_s=wire, tx_bytes=wire_bytes)
+            stats = sim.run()
+            lat = np.array([pre[rec.rid] + rec.latency_s
+                            for rec in stats.served])
+            n_served, drop = len(stats.served), stats.drop_fraction()
+            mean_batch = stats.mean_batch()
+            util = stats.utilization(r, trace.horizon_s)
         out[(split, b, r, window_s)] = {
             "devices": sorted(p.device for p in members),
-            "n_served": len(stats.served),
-            "drop_fraction": stats.drop_fraction(),
+            "n_served": n_served,
+            "drop_fraction": drop,
             "p50_s": float(np.percentile(lat, 50)) if len(lat) else float("inf"),
             "p99_s": float(np.percentile(lat, 99)) if len(lat) else float("inf"),
-            "mean_batch": stats.mean_batch(),
-            "utilization": stats.utilization(r, trace.horizon_s),
+            "mean_batch": mean_batch,
+            "utilization": util,
+            "engine": eng,
         }
     return out

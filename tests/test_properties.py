@@ -175,3 +175,53 @@ def test_attention_softmax_convexity(sq, sk, g, seed):
     v = jax.random.normal(ks[2], (1, sk, 2, 16))
     out = ref.flash_attention_ref(q, k, v, causal=sq <= sk)
     assert float(jnp.abs(out).max()) <= float(jnp.abs(v).max()) + 1e-4
+
+
+@settings(**SET)
+@given(n=st.integers(1, 400), k=st.integers(1, 4),
+       max_batch=st.integers(1, 16),
+       window_ms=st.sampled_from([0.0, 0.1, 2.0, 10.0]),
+       queue_limit=st.integers(1, 120),
+       service_us=st.floats(10.0, 2000.0), per_item=st.floats(0.0, 1e7),
+       load=st.floats(0.2, 5.0), seed=st.integers(0, 1000))
+def test_cluster_engines_agree_on_random_fleets(n, k, max_batch, window_ms,
+                                                queue_limit, service_us,
+                                                per_item, load, seed):
+    """The vectorized cluster engine replays the event engine exactly:
+    identical drop/batch/served counts and percentile agreement for
+    random arrival processes, service costs, and cluster configs."""
+    from repro.fleet.cluster import ClusterConfig
+    from repro.fleet.vectorized import (check_against_event_engine,
+                                        simulate_cluster_vectorized)
+    from repro.serving.engine import BatchCostModel
+    cost = BatchCostModel(flops_per_item=per_item, flops_per_s=1e12,
+                          fixed_overhead_s=service_us * 1e-6)
+    cfg = ClusterConfig(n_replicas=k, max_batch=max_batch,
+                        batch_window_s=window_ms * 1e-3,
+                        queue_limit=queue_limit)
+    cap = k * max_batch / cost.service_time(max_batch)
+    rng = np.random.default_rng(seed)
+    t = np.cumsum(rng.exponential(1.0 / (cap * load), n))
+    stats = simulate_cluster_vectorized(t, cost, cfg)
+    # raises AssertionError on any count mismatch or percentile drift
+    check_against_event_engine(t, cost, cfg, stats)
+
+
+@settings(**SET)
+@given(n=st.integers(2, 300), rate=st.floats(100.0, 20_000.0),
+       seed=st.integers(0, 100))
+def test_cluster_engines_agree_on_bursty_arrivals(n, rate, seed):
+    """Non-poisson (MMPP) arrival processes through both engines."""
+    from repro.fleet.cluster import ClusterConfig
+    from repro.fleet.traffic import bursty_arrivals
+    from repro.fleet.vectorized import (check_against_event_engine,
+                                        simulate_cluster_vectorized)
+    from repro.serving.engine import BatchCostModel
+    rng = np.random.default_rng(seed)
+    t = bursty_arrivals(rate, n, rng)
+    cost = BatchCostModel(flops_per_item=1e6, flops_per_s=1e12,
+                          fixed_overhead_s=1e-3)
+    cfg = ClusterConfig(n_replicas=2, max_batch=4, batch_window_s=2e-3,
+                        queue_limit=32)
+    stats = simulate_cluster_vectorized(t, cost, cfg)
+    check_against_event_engine(t, cost, cfg, stats)

@@ -1,0 +1,287 @@
+"""Vectorized cluster engine: exact agreement with the event engine
+(the screen/refine contract of ``fleet.vectorized``), streaming stats,
+the fluid overload fallback, and the planner/study ``engine=`` knob."""
+import numpy as np
+import pytest
+
+from repro.fleet.cluster import ClusterConfig, ClusterSim
+from repro.fleet.vectorized import (FLUID_MIN_REQUESTS, PCTL_RTOL,
+                                    StreamingClusterStats,
+                                    VectorClusterStats,
+                                    VectorizedClusterSim,
+                                    check_against_event_engine,
+                                    fluid_cluster_stats,
+                                    simulate_cluster_vectorized)
+from repro.obs import Recorder
+from repro.serving.engine import BatchCostModel
+
+
+def _cost(service_s=1e-3, per_item=0.0):
+    return BatchCostModel(flops_per_item=per_item, flops_per_s=1e12,
+                          fixed_overhead_s=service_s)
+
+
+def _poisson(rate, n, seed=0):
+    return np.cumsum(np.random.default_rng(seed).exponential(1.0 / rate, n))
+
+
+# ----------------------------------------------------- exact agreement ----
+@pytest.mark.parametrize("cfg,rate", [
+    # M/D/1, no batching window
+    (ClusterConfig(n_replicas=1, max_batch=1, batch_window_s=0.0), 600.0),
+    # batching + window, under capacity
+    (ClusterConfig(n_replicas=2, max_batch=4, batch_window_s=2e-3), 1500.0),
+    # overloaded with a small admission queue: drops everywhere
+    (ClusterConfig(n_replicas=2, max_batch=8, batch_window_s=1e-3,
+                   queue_limit=32), 9000.0),
+    # queue_limit < max_batch: the L-bounded dispatch corner
+    (ClusterConfig(n_replicas=1, max_batch=16, batch_window_s=5e-3,
+                   queue_limit=5), 4000.0),
+])
+def test_vectorized_matches_event_engine(cfg, rate):
+    t = _poisson(rate, 1200, seed=3)
+    # check_event_engine raises on any count mismatch or percentile drift
+    stats = simulate_cluster_vectorized(t, _cost(1e-3, 1e6), cfg,
+                                        check_event_engine=True)
+    assert isinstance(stats, VectorClusterStats)
+    assert stats.n_served + stats.dropped == 1200
+
+
+def test_unsorted_offers_keep_offer_order():
+    cfg = ClusterConfig(n_replicas=2, max_batch=4, batch_window_s=2e-3)
+    t = _poisson(2000.0, 500, seed=5)
+    rng = np.random.default_rng(9)
+    perm = rng.permutation(len(t))
+    rids = np.arange(1000, 1000 + len(t))
+    stats = simulate_cluster_vectorized(t[perm], _cost(), cfg,
+                                        rids=rids[perm],
+                                        check_event_engine=True)
+    # arrays stay in offer order: request j's offer time is t[perm][j]
+    assert np.array_equal(stats.t_offer, t[perm])
+    assert np.array_equal(stats.rids, rids[perm])
+    served = stats.served                     # event-engine compat records
+    assert all(r.t_done >= r.t_dispatch >= r.t_offer for r in served)
+
+
+def test_latency_arrays_match_event_records_elementwise():
+    cfg = ClusterConfig(n_replicas=3, max_batch=8, batch_window_s=1e-3,
+                        queue_limit=64)
+    t = _poisson(12_000.0, 2000, seed=11)     # ~1.5x overload
+    cost = _cost(5e-4, 2e6)
+    vstats = simulate_cluster_vectorized(t, cost, cfg)
+    sim = ClusterSim(cost, cfg)
+    sim.offer_trace(enumerate(t.tolist()))
+    est = sim.run()
+    by_rid = {r.rid: r for r in est.served}
+    m = ~vstats.drop_mask
+    for rid, td, to in zip(vstats.rids[m], vstats.t_done[m],
+                           vstats.t_offer[m]):
+        assert abs((td - to) - by_rid[int(rid)].latency_s) < 1e-9
+
+
+# ------------------------------------------------------------ streaming ----
+def test_streaming_stats_counts_exact_percentiles_bucketed():
+    cfg = ClusterConfig(n_replicas=2, max_batch=8, batch_window_s=2e-3,
+                        queue_limit=128)
+    t = _poisson(20_000.0, 5000, seed=2)
+    cost = _cost(5e-4)
+    exact = simulate_cluster_vectorized(t, cost, cfg)
+    stream = simulate_cluster_vectorized(t, cost, cfg, streaming=True)
+    assert isinstance(stream, StreamingClusterStats)
+    # counts are exact; quantiles carry only the histogram bucket error
+    assert stream.n_served == exact.n_served
+    assert stream.dropped == exact.dropped
+    assert stream.batches == exact.batches
+    assert stream.drop_fraction() == exact.drop_fraction()
+    assert stream.mean_batch() == exact.mean_batch()
+    for p in (50, 99):
+        a, b = exact.percentile(p), stream.percentile(p)
+        assert abs(a - b) / a < 0.30, (p, a, b)   # 9 buckets/decade
+    with pytest.raises(RuntimeError):
+        stream.latencies()
+
+
+# ------------------------------------------------------- wrapper parity ----
+def test_vectorized_cluster_sim_is_a_drop_in():
+    cfg = ClusterConfig(n_replicas=2, max_batch=4, batch_window_s=2e-3)
+    cost = _cost(1e-3)
+    t = _poisson(1800.0, 800, seed=7)
+    ref = ClusterSim(cost, cfg)
+    ref.offer_trace(enumerate(t.tolist()))
+    est = ref.run()
+
+    vec = VectorizedClusterSim(cost, cfg)
+    half = len(t) // 2
+    vec.offer_trace((i, float(ti)) for i, ti in enumerate(t[:half]))
+    vec.offer_array(t[half:])                 # bulk intake, auto rids
+    stats = vec.run(check_event_engine=True)
+    assert stats is vec.stats
+    assert stats.n_served == len(est.served)
+    assert stats.dropped == est.dropped
+    assert stats.batches == est.batches
+
+
+def test_offer_trace_four_tuples_forward_tx_metadata():
+    # the ClusterSim.offer_trace bugfix: 4-field rows must reach offer()
+    cost = _cost(1e-3)
+    cfg = ClusterConfig(n_replicas=1, max_batch=2, batch_window_s=1e-3)
+    rec = Recorder(window_s=0.01)
+    sim = ClusterSim(cost, cfg, obs=rec)
+    t = _poisson(500.0, 40, seed=1)
+    sim.offer_trace((i, float(ti), 1e-4, 2048) for i, ti in enumerate(t))
+    stats = sim.run()
+    wires = [s for s in rec.tracer.spans if s.name == "wire"]
+    assert len(wires) == len(stats.served) == 40
+    assert all(s.args["bytes"] == 2048 for s in wires)
+    # and the 2-field form still works
+    sim2 = ClusterSim(cost, cfg)
+    sim2.offer_trace(enumerate(t.tolist()))
+    assert len(sim2.run().served) == 40
+
+
+def test_vectorized_emits_fleet_series_and_counters():
+    cfg = ClusterConfig(n_replicas=2, max_batch=4, batch_window_s=2e-3,
+                        queue_limit=16)
+    cost = _cost(1e-3)
+    t = _poisson(4000.0, 1500, seed=13)
+    rec = Recorder(window_s=0.01)
+    vec = VectorizedClusterSim(cost, cfg, obs=rec)
+    vec.offer_array(t, tx_s=np.full(len(t), 1e-4),
+                    tx_bytes=np.full(len(t), 1024))
+    stats = vec.run()
+    rep = rec.report()
+    for name in ("fleet.arrival_rate_hz", "fleet.queue_depth",
+                 "fleet.drop_fraction", "fleet.utilization",
+                 "fleet.inflight_bytes", "fleet.latency_p50_s",
+                 "fleet.latency_p99_s"):
+        ts, _ = rep.timeseries(name)
+        assert len(ts) > 3, name
+        assert np.all(np.diff(ts) > 0), name
+    snap = rec.metrics.snapshot()
+    assert snap["fleet.arrivals"] == 1500
+    assert snap["fleet.drops"] == stats.dropped
+    assert snap["fleet.served"] == stats.n_served
+    assert snap["fleet.batches"] == stats.batches
+    assert any(s.name == "cluster.vectorized" for s in rec.tracer.spans)
+
+
+# ------------------------------------------------------- fluid fallback ----
+def test_auto_mode_stays_exact_on_small_runs():
+    cfg = ClusterConfig(n_replicas=1, max_batch=4, batch_window_s=1e-3)
+    stats = simulate_cluster_vectorized(_poisson(1000.0, 300, seed=4),
+                                        _cost(), cfg, mode="auto")
+    assert isinstance(stats, VectorClusterStats)
+
+
+def test_auto_mode_falls_back_to_fluid_in_deep_overload():
+    cfg = ClusterConfig(n_replicas=1, max_batch=8, batch_window_s=1e-3,
+                        queue_limit=256)
+    cost = _cost(1e-3)
+    cap = cfg.max_batch / cost.service_time(cfg.max_batch)
+    n = FLUID_MIN_REQUESTS
+    t = _poisson(5.0 * cap, n, seed=6)        # 5x sustained overload
+    stats = simulate_cluster_vectorized(t, cost, cfg, mode="auto")
+    assert isinstance(stats, StreamingClusterStats)
+    # deep overload: the fluid drop fraction approaches 1 - 1/load
+    assert abs(stats.drop_fraction() - 0.8) < 0.05
+    # fluid is approximate by design: checking it is a contract error
+    with pytest.raises(ValueError):
+        simulate_cluster_vectorized(t, cost, cfg, mode="fluid",
+                                    check_event_engine=True)
+
+
+def test_fluid_matches_exact_in_overload_regime():
+    cfg = ClusterConfig(n_replicas=2, max_batch=8, batch_window_s=1e-3,
+                        queue_limit=64)
+    cost = _cost(1e-3)
+    cap = 2 * cfg.max_batch / cost.service_time(cfg.max_batch)
+    t = _poisson(4.0 * cap, 40_000, seed=8)
+    exact = simulate_cluster_vectorized(t, cost, cfg)
+    fluid = fluid_cluster_stats(t, cost, cfg)
+    assert abs(fluid.drop_fraction() - exact.drop_fraction()) < 0.05
+    assert fluid.percentile(50) == pytest.approx(exact.percentile(50),
+                                                 rel=0.5)
+
+
+# ----------------------------------------------------- engine=... knob ----
+def test_planner_engine_knob_parity(request):
+    from repro.core.qos import QoSRequirements
+    from repro.fleet import (DeploymentPlanner, SearchSpace,
+                             generate_trace)
+    from repro.fleet.planner import simulate_deployment
+    from repro.models.vgg import feature_index
+    from repro.netsim.channel import Channel
+    from repro.fleet import DeviceClass
+
+    model, params = request.getfixturevalue("vgg_small")
+    fi = feature_index(model)
+    cs = np.linspace(1.0, 0.2, len(fi))
+
+    def accuracy_fn(scenario, netcfg):
+        return 0.9 if scenario.kind != "LC" else 0.6
+
+    planner = DeploymentPlanner(model, params, cs_curve=cs, layer_idx=fi,
+                                accuracy_fn=accuracy_fn,
+                                input_bytes=16 * 16 * 3 * 4, n_frames=4)
+    mix = [DeviceClass.make("mcu", Channel(1e-3, 1e6, 1e6, seed=1)),
+           DeviceClass.make("edge-embedded",
+                            Channel(1e-4, 50e6, 50e6, seed=2))]
+    legal = set(model.cut_points())
+    sps = tuple(sp for sp in fi if sp in legal)[:2]
+    space = SearchSpace(split_points=sps, protocols=("tcp",),
+                        batch_sizes=(1, 4), replica_counts=(1,),
+                        top_k_splits=1)
+    trace = generate_trace(mix, 300, 150.0, seed=23)
+
+    pe = planner.search(trace, mix, space, engine="event")
+    pv = planner.search(trace, mix, space, engine="vectorized")
+    assert len(pe) == len(pv) > 0
+    for a, b in zip(pe, pv):
+        assert a.drop_fraction == b.drop_fraction
+        if np.isfinite(a.p99_s):
+            assert b.p99_s == pytest.approx(a.p99_s, rel=PCTL_RTOL)
+    # screen/refine contract: every Pareto-front point is event-priced
+    assert all(p.engine == "event" for p in planner.pareto_front(pv))
+    assert any(p.engine == "vectorized" for p in pv)
+
+    with pytest.raises(ValueError):
+        planner.search(trace, mix, space, engine="warp")
+
+    qos = QoSRequirements(max_latency_s=10.0, min_accuracy=0.0)
+    plans = planner.suggest(qos, (trace, mix), space, points=pv)
+    re_ = simulate_deployment(plans, trace, mix, planner, engine="event")
+    rv = simulate_deployment(plans, trace, mix, planner,
+                             engine="vectorized", check_event_engine=True)
+    assert re_ and set(re_) == set(rv)
+    for key in re_:
+        assert re_[key]["engine"] == "event"
+        assert rv[key]["engine"] == "vectorized"
+        assert rv[key]["n_served"] == re_[key]["n_served"]
+        assert rv[key]["p99_s"] == pytest.approx(re_[key]["p99_s"],
+                                                 rel=PCTL_RTOL)
+
+
+# ------------------------------------------------- randomized sweep ----
+# (the hypothesis property tests live in test_properties.py with the
+# rest of the hypothesis suite; this seeded sweep keeps the agreement
+# contract exercised even where hypothesis is not installed)
+def test_engines_agree_on_seeded_random_sweep():
+    rng = np.random.default_rng(42)
+    for _ in range(40):
+        n = int(rng.integers(1, 400))
+        k = int(rng.integers(1, 5))
+        max_batch = int(rng.integers(1, 17))
+        cfg = ClusterConfig(
+            n_replicas=k, max_batch=max_batch,
+            batch_window_s=float(rng.choice([0.0, 1e-4, 2e-3, 1e-2])),
+            queue_limit=int(rng.integers(1, 120)))
+        cost = BatchCostModel(flops_per_item=float(rng.uniform(0, 1e7)),
+                              flops_per_s=1e12,
+                              fixed_overhead_s=float(rng.uniform(1e-5,
+                                                                 2e-3)))
+        cap = k * max_batch / cost.service_time(max_batch)
+        t = np.cumsum(rng.exponential(
+            1.0 / (cap * float(rng.uniform(0.2, 5.0))), n))
+        stats = simulate_cluster_vectorized(t, cost, cfg)
+        # raises AssertionError on any disagreement
+        check_against_event_engine(t, cost, cfg, stats)
