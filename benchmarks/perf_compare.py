@@ -80,6 +80,21 @@ GATE_SPECS = {
         ("workloads.diurnal.drop_fraction", "lower", 0.001, None),
         ("workloads.diurnal.p99_ms", "lower", 0.001, None),
     ],
+    # the adaptive replanning controller.  Everything simulated is
+    # deterministic given the seed (both engines must even agree on the
+    # switch sequence — bench_controller verifies that in-process), so
+    # p99s, the improvement ratio, switch count, and migration
+    # disruption gate on the exact-replay band; the >=1.5x improvement
+    # floor lives inside bench_controller --quick; wall time is not
+    # gated
+    "controller": [
+        ("adaptive.p99_ms", "lower", 0.001, None),
+        ("static.p99_ms", "lower", 0.001, None),
+        ("improvement_x", "higher", 0.001, None),
+        ("adaptive.n_switches", "lower", 0.001, None),
+        ("adaptive.migration.n_delayed", "lower", 0.001, None),
+        ("adaptive.drop_fraction", "lower", 0.001, None),
+    ],
     # telemetry must be free when off and cheap when on: both overheads
     # are paired-ratio medians of two wall clocks (bench_obs measures A
     # and B back-to-back per pair so host drift cancels), gated on hard

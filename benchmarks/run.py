@@ -23,6 +23,7 @@ SECTIONS = {
     "pipeline": "benchmarks.bench_pipeline",
     "planner": "benchmarks.bench_planner",
     "megafleet": "benchmarks.bench_megafleet",
+    "controller": "benchmarks.bench_controller",
     "obs": "benchmarks.bench_obs",
     "roofline": "benchmarks.roofline",
     # needs >=32 emulated devices; standalone: python -m benchmarks.bench_multipod_wire

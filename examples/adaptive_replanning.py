@@ -1,0 +1,140 @@
+"""Re-plan a fleet deployment live as the workload drifts: the
+morning rush ends, the adaptive controller notices, and it down-shifts
+the serving plan — beating the *best possible* static deployment.
+
+Static planning (``examples/fleet_planning.py``) answers "which split,
+protocol, batch size, and replica count for THIS workload".  But real
+workloads move: arrival rates swing, links degrade, replicas fail.  The
+adaptive control loop (``fleet.controller``) closes the loop:
+
+  signals ->- detect ->- screen ->- price ->- switch
+    ^   windowed fleet   closed     vectorized   drain + warm-up,  |
+    |   rate/queue/drop  -form      engine on    hysteresis,       |
+    |                    shortlist  the window   bounded switches  |
+    +--------------------- next control period -------------------+
+
+The scenario: a 20k req/s rush (only a large serving batch keeps up)
+then a calm 1.5k req/s tail (where that batch pays its batching window
+on every single request).  A static deployment must pick one plan for
+the whole day; the controller detects the rate drift at the phase
+boundary, re-screens its candidates on the *observed* window, and
+switches — paying an explicit, reported migration cost (requests that
+land during warm-up are delayed, never lost).
+
+  1. build the regime-change trace (rush -> calm, seeded),
+  2. run the controller on the vectorized engine, then re-run on the
+     event engine and assert the switch decisions are identical (the
+     cross-engine contract),
+  3. run every candidate statically and take the best — the honest
+     baseline,
+  4. compare p99s, show the switch timeline and migration bill,
+  5. export the controller telemetry (``controller.*`` series, replan /
+     switch / era spans) to Perfetto at
+     ``results/adaptive_replanning/trace.json``.
+
+Run:  PYTHONPATH=src python examples/adaptive_replanning.py [--quick]
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.fleet import (AdaptiveController, CandidatePlan,
+                         ControllerConfig, DeviceClass, Phase,
+                         RegimeChangeTrace)
+from repro.netsim.channel import Channel
+from repro.obs import Recorder
+from repro.serving.engine import BatchCostModel
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
+                       "adaptive_replanning")
+# svc(1) = 0.21 ms, svc(64) = 0.84 ms: the big batch serves ~76k req/s
+# but quadruples the calm-weather latency floor
+COST = BatchCostModel(flops_per_item=1e7, flops_per_s=1e12,
+                      fixed_overhead_s=2e-4)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="shorter scenario (CI smoke)")
+    args = ap.parse_args()
+
+    print("== 1. the drifting workload ==")
+    phases = ([Phase(1.0, 20_000.0), Phase(4.0, 1_500.0)] if args.quick
+              else [Phase(2.0, 50_000.0), Phase(8.0, 2_500.0)])
+    mix = (DeviceClass.make("edge-embedded",
+                            Channel(1e-4, 100e6, 100e6, seed=1)),)
+    scenario = RegimeChangeTrace.from_phases(mix, phases, seed=7)
+    for t, ph in zip(scenario.boundaries, phases):
+        print(f"   t={t:5.1f} s: {ph.rate_hz:8,.0f} req/s for "
+              f"{ph.duration_s:.0f} s")
+    print(f"   {len(scenario.trace):,} requests over "
+          f"{scenario.horizon_s:.0f} s")
+
+    candidates = [
+        CandidatePlan("b1", "SC@3", 3, "tcp", 1, 1, 5e-3, COST),
+        CandidatePlan("b8", "SC@3", 3, "tcp", 8, 1, 5e-3, COST),
+        CandidatePlan("b64", "SC@3", 3, "tcp", 64, 1, 5e-3, COST),
+    ]
+    for c in candidates:
+        print(f"   candidate {c.key}: serves up to "
+              f"{c.capacity_hz():8,.0f} req/s, floor "
+              f"{COST.service_time(c.max_batch) * 1e3:.2f} ms")
+
+    print("== 2. the control loop (both engines) ==")
+    rec = Recorder()
+    cfg = ControllerConfig(control_period_s=0.25, drift_threshold=0.3,
+                           min_improvement=0.05, warmup_s=0.02,
+                           max_switches=4)
+    ctl = AdaptiveController(candidates, config=cfg, obs=rec)
+    adaptive = ctl.run(scenario, engine="vectorized")
+    check = ctl.run(scenario, engine="event")
+    assert check.plan_keys == adaptive.plan_keys
+    assert [s.t_s for s in check.switches] == \
+        [s.t_s for s in adaptive.switches]
+    assert check.migration == adaptive.migration
+    print(f"   engines agree: plan sequence {' -> '.join(adaptive.plan_keys)}"
+          f" on vectorized AND event")
+    for s in adaptive.switches:
+        print(f"   t={s.t_s:5.2f} s: {s.from_key} -> {s.to_key} "
+              f"({s.reason}; predicted p99 "
+              f"{s.predicted_p99_s * 1e3:.2f} ms vs incumbent "
+              f"{s.incumbent_p99_s * 1e3:.2f} ms)")
+
+    print("== 3. the honest baseline: best static plan ==")
+    static = ctl.best_static(scenario)
+    print(f"   best fixed plan is {static.plan_keys[0]}: p99 "
+          f"{static.p99_s * 1e3:.2f} ms, drop {static.drop_fraction:.2%}")
+
+    print("== 4. adaptive vs static ==")
+    improvement = static.p99_s / adaptive.p99_s
+    mig = adaptive.migration
+    print(f"   adaptive p99 {adaptive.p99_s * 1e3:.2f} ms "
+          f"(drop {adaptive.drop_fraction:.2%}) — {improvement:.2f}x "
+          f"better than the best static plan")
+    print(f"   migration bill: {mig['n_delayed']} requests delayed "
+          f"{mig['added_delay_s'] * 1e3:.0f} ms in total by warm-up "
+          f"({adaptive.n_switches} switch(es), bound {cfg.max_switches})")
+    assert adaptive.drop_fraction == 0.0
+    assert adaptive.n_switches <= cfg.max_switches
+    assert improvement > 1.5          # the headline, enforced
+
+    print("== 5. telemetry -> Perfetto ==")
+    report = rec.report()
+    t, rate = report.timeseries("controller.rate_hz")
+    print(f"   {adaptive.n_decisions} control decisions, observed rate "
+          f"{rate.min():,.0f}..{rate.max():,.0f} req/s")
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = os.path.join(OUT_DIR, "trace.json")
+    report.to_chrome_trace(path, clock="sim",
+                           metadata={"seed": 7,
+                                     "plan_keys": list(adaptive.plan_keys),
+                                     "improvement_x": improvement})
+    print(f"   {path} (open in https://ui.perfetto.dev — eras, replans, "
+          f"and switches on the sim-clock timeline)")
+
+
+if __name__ == "__main__":
+    main()

@@ -547,12 +547,10 @@ class Study:
             return acc
         return accuracy_fn
 
-    def _simulate_fleet(self, fleet, n_frames, space, overrides,
-                        refine=None, engine="event") -> "Study":
-        from repro.fleet.planner import DeploymentPlanner, SearchSpace
-        trace, devices = fleet
+    def _make_planner(self, n_frames):
+        from repro.fleet.planner import DeploymentPlanner
         measured = self._data is not None and self.cfg is None
-        self._planner = DeploymentPlanner(
+        return DeploymentPlanner(
             self.model, self.params, cs_curve=self.cs_curve,
             layer_idx=self.layer_idx, ae_map=self._ae_map,
             eval_data=((np.asarray(self._x), np.asarray(self._labels))
@@ -563,12 +561,21 @@ class Study:
             input_bytes=self.input_bytes, n_frames=n_frames,
             cost=self._calibration, sample=self._sample,
             obs=self._obs)
-        if space is None:
-            sps = tuple(c.split_layer for c in self.split_candidates())
-            kw = dict(split_points=sps,
-                      include_lc=self.lc_model is not None)
-            kw.update(overrides)
-            space = SearchSpace(**kw)
+
+    def _make_space(self, space, overrides):
+        from repro.fleet.planner import SearchSpace
+        if space is not None:
+            return space
+        sps = tuple(c.split_layer for c in self.split_candidates())
+        kw = dict(split_points=sps, include_lc=self.lc_model is not None)
+        kw.update(overrides)
+        return SearchSpace(**kw)
+
+    def _simulate_fleet(self, fleet, n_frames, space, overrides,
+                        refine=None, engine="event") -> "Study":
+        trace, devices = fleet
+        self._planner = self._make_planner(n_frames)
+        space = self._make_space(space, overrides)
         self._fleet, self._space = (trace, devices), space
         self._fleet_engine = engine
         self._points = self._planner.search(trace, devices, space,
@@ -577,6 +584,40 @@ class Study:
         self._path = None
         self._suggested = self._plans = self._tier_best = None
         return self
+
+    def adapt(self, scenario, *, qos=None, space=None, config=None,
+              initial: Optional[str] = None, engine: str = "vectorized",
+              n_frames: int = 8, **space_overrides) -> dict:
+        """Run the online adaptive replanner over a regime-change
+        scenario and race it against the strongest static plan.
+
+        ``scenario`` is a :class:`repro.fleet.scenario.RegimeChangeTrace`
+        (phases + faults); the controller's candidate grid comes from
+        the same planner configuration ``simulate(fleet=...)`` would
+        build (CS-ranked splits x protocol x batch x replicas, measured
+        costs when the study is calibrated).  Returns ``{"adaptive":
+        AdaptiveRunResult, "static": AdaptiveRunResult, "controller":
+        AdaptiveController}`` — ``static`` is the *best* fixed plan in
+        the grid run over the same scenario (same era machinery, same
+        physical faults), the fair baseline for the adaptive p99.
+        """
+        from repro.fleet.controller import AdaptiveController
+        self._planner = self._make_planner(n_frames)
+        space = self._make_space(space, space_overrides)
+        controller = AdaptiveController.from_planner(
+            self._planner, space, qos=qos, config=config)
+        with self._obs.tracer.span("study.adapt", tid="study",
+                                   cat="study") as sp:
+            adaptive = controller.run(scenario, initial=initial,
+                                      engine=engine)
+            static = controller.best_static(scenario, engine=engine)
+            sp.args.update(
+                n_candidates=len(controller.candidates), engine=engine,
+                n_switches=adaptive.n_switches,
+                adaptive_p99_ms=round(adaptive.p99_s * 1e3, 3),
+                static_p99_ms=round(static.p99_s * 1e3, 3))
+        return {"adaptive": adaptive, "static": static,
+                "controller": controller}
 
     @property
     def verdicts(self) -> list:

@@ -109,6 +109,9 @@ class ClusterSim:
         # free replica *indices* (not a count), so batch spans land on a
         # stable per-replica track in the exported trace
         self._free = list(range(cfg.n_replicas))
+        self._n_live = cfg.n_replicas   # live pool size (set_replicas)
+        self._next_rid = cfg.n_replicas  # fresh track ids for grown pool
+        self._retire = 0             # busy replicas to retire on _on_done
         self._window_timer = None    # live EventHandle or None
         self._due = False            # window expired with work still waiting
         # ------------------------------------------------- telemetry ----
@@ -120,6 +123,44 @@ class ClusterSim:
         self._win_lat = self.obs.metrics.histogram("fleet.window_latency_s")
         self._inflight_bytes = 0
         self._pre = {}               # rid -> (t_tx_start, tx_bytes)
+
+    # ---------------------------------------------------- live controls ----
+    @property
+    def queue_depth(self) -> int:
+        """Requests admitted but not yet dispatched — the live signal
+        the adaptive controller samples."""
+        return len(self._waiting)
+
+    @property
+    def n_replicas(self) -> int:
+        """Live replica-pool size (``set_replicas`` moves it; ``cfg``
+        keeps the configured starting point)."""
+        return self._n_live
+
+    def set_replicas(self, k: int) -> None:
+        """Resize the replica pool in place (fail/recover injection).
+
+        Growth adds fresh replicas immediately (new trace track ids, so
+        a recovered replica is visibly a different machine) and
+        dispatches any ready work.  Shrinkage retires idle replicas
+        first; busy ones finish their in-flight batch and then leave —
+        graceful failover, a failure never kills a running batch.
+        """
+        assert k >= 1
+        while k > self._n_live:
+            if self._retire > 0:     # un-cancel a pending retirement
+                self._retire -= 1
+            else:
+                self._free.append(self._next_rid)
+                self._next_rid += 1
+            self._n_live += 1
+        while k < self._n_live:
+            if self._free:
+                self._free.pop()
+            else:
+                self._retire += 1    # consumed by the next _on_done
+            self._n_live -= 1
+        self._dispatch_ready()
 
     # ------------------------------------------------------------ intake ----
     def offer(self, rid: int, t_arrival: float, *, tx_s: float = 0.0,
@@ -224,7 +265,10 @@ class ClusterSim:
         # dispatches as soon as a replica frees up
 
     def _on_done(self, batch, replica: int) -> None:
-        self._free.append(replica)
+        if self._retire > 0:         # deferred shrink: retire, don't free
+            self._retire -= 1
+        else:
+            self._free.append(replica)
         for r in batch:
             r.t_done = self.q.now
         self.stats.served.extend(batch)
@@ -271,7 +315,7 @@ class ClusterSim:
         m.record("fleet.drop_fraction", t,
                  w["drops"] / w["offered"] if w["offered"] else 0.0)
         m.record("fleet.utilization", t,
-                 w["busy_s"] / (self.cfg.n_replicas * dt))
+                 w["busy_s"] / (self._n_live * dt))
         m.record("fleet.inflight_bytes", t,
                  m.gauge("fleet.inflight_bytes").value)
         if self._win_lat.n:

@@ -455,11 +455,9 @@ class DeploymentPlanner:
 
     ``cost``: any :class:`repro.api.types.CostModel` pricing both the
     per-flow stage times and the server's batched service time; cells it
-    can't price fall back to the analytic FLOPs model.
-    ``cost_source``/``calibration`` are the pre-``repro.api`` spelling of
-    the same choice, kept as a deprecation shim (``cost=table`` is the
-    one-argument replacement for ``cost_source="measured",
-    calibration=table``).
+    can't price fall back to the analytic FLOPs model.  (The
+    pre-``repro.api`` ``cost_source=``/``calibration=`` pair was removed
+    after a deprecation cycle; ``cost=table`` is the spelling.)
 
     ``obs`` (a ``repro.obs.Recorder``): :meth:`search` emits wall-clock
     phase spans (one per device class, with leg/point counts) and
@@ -475,35 +473,13 @@ class DeploymentPlanner:
                  lc_model=None, lc_params=None,
                  server_platform=PLATFORMS["server-gpu"],
                  input_bytes: Optional[int] = None, n_frames: int = 8,
-                 cost=None, cost_source: Optional[str] = None,
-                 calibration=None, sample=None, obs=None):
-        if cost_source is not None or calibration is not None:
-            warnings.warn(
-                "DeploymentPlanner(cost_source=..., calibration=...) is "
-                "deprecated; pass cost=... (any repro.api.types.CostModel "
-                "— cost=table replaces cost_source='measured', "
-                "calibration=table)", DeprecationWarning, stacklevel=2)
-        if cost_source is None:
-            cost_source = "analytic"
+                 cost=None, sample=None, obs=None):
         if accuracy_fn is None and eval_data is None:
             raise ValueError("need eval_data to measure accuracy "
                              "(or pass accuracy_fn)")
         if input_bytes is None and eval_data is None:
             raise ValueError("need input_bytes when no eval_data is given "
                              "(it is derived from the eval inputs otherwise)")
-        if cost_source not in ("analytic", "measured"):
-            raise ValueError(f"cost_source must be 'analytic' or 'measured',"
-                             f" got {cost_source!r}")
-        if cost_source == "measured" and calibration is None:
-            raise ValueError("cost_source='measured' needs a calibration "
-                             "table (repro.runtime.calibrate.calibrate)")
-        if cost_source == "analytic" and calibration is not None:
-            raise ValueError("calibration given but cost_source='analytic' "
-                             "would ignore it; pass cost_source='measured'")
-        if cost is not None and calibration is not None:
-            raise ValueError("pass either cost= (the repro.api spelling) or "
-                             "the deprecated cost_source=/calibration= pair, "
-                             "not both")
         self.model, self.params = model, params
         self.cs_curve, self.layer_idx = cs_curve, list(layer_idx)
         self.ae_map = dict(ae_map or {})
@@ -516,17 +492,7 @@ class DeploymentPlanner:
             input_bytes = int(np.prod(xs.shape[1:])) * 4
         self.input_bytes = input_bytes
         self.n_frames = n_frames
-        self.cost_source = cost_source
-        self.calibration = calibration
-        if cost is not None:
-            self.cost = cost
-        elif calibration is not None:
-            # deprecated spelling: wrap so pre-CostModel tables (2-arg
-            # flow_times, lookup()) keep working
-            from repro.netsim.simulator import _LegacyCalibration
-            self.cost = _LegacyCalibration(calibration)
-        else:
-            self.cost = None
+        self.cost = cost
         # example input pytree for models whose input_shape cannot
         # describe the input (transformer layered views)
         self.sample = sample

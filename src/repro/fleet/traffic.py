@@ -17,7 +17,7 @@ n, seed)`` tuple always yields the identical trace.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 from typing import Optional, Sequence
 
 import numpy as np
@@ -74,6 +74,34 @@ class Trace:
         form the vectorized cluster engine consumes."""
         return np.fromiter((r.t_arrival for r in self.requests), float,
                            len(self.requests))
+
+    def slice(self, t0: float, t1: float) -> "Trace":
+        """The sub-trace of arrivals in ``[t0, t1)``, re-based to start
+        at 0 (horizon ``t1 - t0``).  Request ids and the generating seed
+        are preserved — a slice is provenance-traceable back to the
+        trace it was cut from.  The controller's observation windows and
+        scenario splicing both live on this."""
+        if t1 < t0:
+            raise ValueError(f"empty slice window [{t0}, {t1})")
+        sub = tuple(replace(r, t_arrival=r.t_arrival - t0)
+                    for r in self.requests if t0 <= r.t_arrival < t1)
+        return Trace(sub, t1 - t0, self.pattern, self.seed)
+
+    def concat(self, other: "Trace") -> "Trace":
+        """This trace followed by ``other`` time-shifted to start at
+        this trace's horizon.  Request ids are renumbered sequentially
+        (downstream consumers key on unique rids); the seed survives
+        only when both parts carry the same one — a splice of two
+        different generations has no single generating seed, and
+        pretending otherwise would poison downstream provenance."""
+        shift, n0 = self.horizon_s, len(self.requests)
+        reqs = tuple(replace(r, rid=i) for i, r in enumerate(self.requests))
+        reqs += tuple(replace(r, rid=n0 + i, t_arrival=r.t_arrival + shift)
+                      for i, r in enumerate(other.requests))
+        pattern = (self.pattern if self.pattern == other.pattern
+                   else f"{self.pattern}+{other.pattern}")
+        seed = self.seed if self.seed == other.seed else None
+        return Trace(reqs, shift + other.horizon_s, pattern, seed)
 
 
 # ------------------------------------------------------ arrival processes ----

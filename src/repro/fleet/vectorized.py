@@ -606,6 +606,59 @@ def _to_streaming(stats: VectorClusterStats) -> StreamingClusterStats:
 
 
 # ======================================================================
+# windowed decision signals (engine-agnostic)
+# ======================================================================
+
+def signals_at(t: float, *, t_offer, t_dispatch, t_done, drop_mask,
+               window_s: float, t_prev: Optional[float] = None) -> dict:
+    """The adaptive controller's decision signals at simulated time
+    ``t``, computed from per-request arrays.
+
+    Both cluster engines can produce these arrays (the vectorized stats
+    carry them natively; event-engine records convert trivially), and
+    because the vectorized replay is an exact twin of the event engine,
+    every *count* here — arrivals, drops, queue depth — is identical
+    whichever engine produced the arrays.  That is what makes controller
+    decisions engine-independent: drift detection keys on the exact
+    integer signals, never on float-accumulation-sensitive quantities.
+
+    Windows: arrival-side signals count offers in ``(t - window_s, t]``;
+    completion-side signals (the latency percentiles) take requests done
+    in ``(t_prev, t]`` (``t_prev`` defaults to ``t - window_s``).
+    Only offers with ``t_offer <= t`` are considered, so a prefix replay
+    and an incrementally-run event engine agree by causality.
+    """
+    t_offer = np.asarray(t_offer, float)
+    t_dispatch = np.asarray(t_dispatch, float)
+    t_done = np.asarray(t_done, float)
+    drop_mask = np.asarray(drop_mask, bool)
+    t_lo = t - window_s
+    t_prev = t_lo if t_prev is None else t_prev
+
+    past = t_offer <= t
+    in_win = past & (t_offer > t_lo)
+    n_arr = int(in_win.sum())
+    n_drop = int((in_win & drop_mask).sum())
+    adm = past & ~drop_mask
+    depth = int((adm & (t_dispatch > t)).sum())
+    inflight = int((adm & (t_dispatch <= t) & (t_done > t)).sum())
+    done_win = adm & (t_done > t_prev) & (t_done <= t)
+    lat = t_done[done_win] - t_offer[done_win]
+    return {
+        "t": t,
+        "arrivals": n_arr,
+        "rate_hz": n_arr / window_s if window_s > 0 else 0.0,
+        "drops": n_drop,
+        "drop_fraction": n_drop / n_arr if n_arr else 0.0,
+        "queue_depth": depth,
+        "inflight": inflight,
+        "n_done": int(done_win.sum()),
+        "p50_s": float(np.percentile(lat, 50)) if len(lat) else float("nan"),
+        "p99_s": float(np.percentile(lat, 99)) if len(lat) else float("nan"),
+    }
+
+
+# ======================================================================
 # mean-field fluid fallback
 # ======================================================================
 

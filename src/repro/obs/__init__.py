@@ -17,8 +17,10 @@ Three pillars (see ISSUE/README "Observability"):
 
 A :class:`Recorder` bundles one tracer + one registry; instrumented
 subsystems (``netsim.events``, ``fleet.cluster``, ``runtime.engine``,
-``fleet.planner``) take ``obs=`` and a :class:`TelemetryReport`
-(``Study.observe()``) reads everything back.
+``fleet.planner``, ``fleet.controller`` — the adaptive control loop's
+``controller.*`` series/counters and replan/switch/era spans) take
+``obs=`` and a :class:`TelemetryReport` (``Study.observe()``) reads
+everything back.
 
 Deliberately zero-dependency beyond NumPy: importable from the innermost
 event loop, no jax, no repro imports outward.

@@ -227,8 +227,10 @@ def test_split_candidate_multicut_forms():
     assert tuple(one) == ("SC@3", 3)
 
 
-def test_planner_deprecated_cost_source_warns(vgg_small):
-    """The cost_source=/calibration= shim must say it is deprecated."""
+def test_planner_removed_cost_source_rejected(vgg_small):
+    """The deprecated cost_source=/calibration= pair was removed after
+    its cycle; passing it is now a plain TypeError and the ``cost=``
+    spelling stays warning-free."""
     from repro.fleet.planner import DeploymentPlanner
     from repro.runtime.calibrate import calibrate
     model, params = vgg_small
@@ -237,17 +239,17 @@ def test_planner_deprecated_cost_source_warns(vgg_small):
     cuts = model.cut_points()
     kw = dict(cs_curve=np.linspace(1.0, 0.3, len(cuts)), layer_idx=cuts,
               accuracy_fn=lambda s, n: 0.9, input_bytes=3072)
-    with pytest.warns(DeprecationWarning, match="deprecated"):
-        planner = DeploymentPlanner(model, params, cost_source="measured",
-                                    calibration=table, **kw)
-    assert planner.cost is not None
-    with pytest.warns(DeprecationWarning, match="deprecated"):
+    with pytest.raises(TypeError):
+        DeploymentPlanner(model, params, cost_source="measured",
+                          calibration=table, **kw)
+    with pytest.raises(TypeError):
         DeploymentPlanner(model, params, cost_source="analytic", **kw)
     # the repro.api spelling stays silent
     import warnings as _w
     with _w.catch_warnings():
         _w.simplefilter("error", DeprecationWarning)
-        DeploymentPlanner(model, params, cost=table, **kw)
+        planner = DeploymentPlanner(model, params, cost=table, **kw)
+    assert planner.cost is not None
 
 
 def test_measure_flow_deprecated_calibration_warns(vgg_small):

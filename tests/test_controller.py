@@ -1,0 +1,358 @@
+"""Adaptive replanning: the drift-aware control loop (fleet.controller)
+and its scenario layer (fleet.scenario, ChannelSchedule, live replica
+pool).  The load-bearing invariant: both cluster engines produce the
+*same switch decisions* on the same scenario."""
+import numpy as np
+import pytest
+
+from repro.fleet import (AdaptiveController, CandidatePlan, ClusterConfig,
+                         ClusterSim, ControllerConfig, DeviceClass,
+                         LinkDegradation, Phase, RegimeChangeTrace,
+                         ReplicaEvent, generate_trace, schedule_faults)
+from repro.netsim.channel import Channel, ChannelSchedule, degrade
+from repro.serving.engine import BatchCostModel
+
+COST = BatchCostModel(flops_per_item=1e7, flops_per_s=1e12,
+                      fixed_overhead_s=2e-4)
+# svc(1)=0.21ms (cap ~4.8k/s) ... svc(64)=0.84ms (cap ~76k/s): small
+# batch is snappy at calm rates, big batch is the only rush survivor
+CHANNEL = Channel(1e-4, 100e6, 100e6, seed=1)
+
+
+def _cands():
+    return [CandidatePlan("b1", "SC@3", 3, "tcp", 1, 1, 5e-3, COST),
+            CandidatePlan("b8", "SC@3", 3, "tcp", 8, 1, 5e-3, COST),
+            CandidatePlan("b64", "SC@3", 3, "tcp", 64, 1, 5e-3, COST)]
+
+
+def _mix():
+    return (DeviceClass.make("edge-embedded", CHANNEL),)
+
+
+@pytest.fixture(scope="module")
+def rush_calm():
+    """Morning rush (only b64 keeps up) then a long calm tail where the
+    big batch pays its batching window on every request."""
+    return RegimeChangeTrace.from_phases(
+        _mix(), [Phase(1.0, 20000.0), Phase(4.0, 1500.0)], seed=7)
+
+
+@pytest.fixture(scope="module")
+def controller():
+    cfg = ControllerConfig(control_period_s=0.25, drift_threshold=0.3,
+                           min_improvement=0.05, warmup_s=0.02,
+                           max_switches=4)
+    return AdaptiveController(_cands(), config=cfg)
+
+
+# ---------------------------------------------------------- scenarios ----
+def test_trace_slice_concat_provenance():
+    mix = _mix()
+    t = generate_trace(mix, 50, 100.0, seed=3)
+    s = t.slice(0.1, 0.3)
+    assert s.seed == 3 and s.horizon_s == pytest.approx(0.2)
+    assert all(0.0 <= r.t_arrival < 0.2 for r in s.requests)
+    u = generate_trace(mix, 30, 100.0, seed=4)
+    c = t.concat(u)
+    assert c.seed is None                      # different generations
+    assert c.horizon_s == pytest.approx(t.horizon_s + u.horizon_s)
+    assert [r.rid for r in c.requests] == list(range(len(c)))
+    assert len(c) == 80
+    same = t.concat(generate_trace(mix, 30, 100.0, seed=3))
+    assert same.seed == 3                      # shared seed survives
+    with pytest.raises(ValueError):
+        t.slice(0.5, 0.1)
+
+
+def test_from_phases_boundaries_and_rates():
+    sc = RegimeChangeTrace.from_phases(
+        _mix(), [Phase(2.0, 100.0), Phase(3.0, 1000.0)], seed=0)
+    assert sc.boundaries == (0.0, 2.0)
+    assert sc.horizon_s == pytest.approx(5.0)
+    t = sc.trace.arrival_times()
+    early = int((t < 2.0).sum())
+    late = int((t >= 2.0).sum())
+    assert 100 < early < 350 and late > 2000   # rates ~100 vs ~1000 Hz
+
+
+def test_channel_schedule_epochs():
+    base = CHANNEL
+    bad = degrade(base, capacity_factor=0.1, latency_factor=4.0)
+    sched = ChannelSchedule(base, ((2.0, bad), (5.0, base)))
+    assert sched.at(1.0) is base and sched.epoch(1.0) == 0
+    assert sched.at(2.0) is bad and sched.epoch(2.0) == 1
+    assert sched.at(7.0) is base and sched.epoch(7.0) == 2
+    assert bad.latency_s == pytest.approx(4e-4)
+    assert bad.effective_bps == pytest.approx(10e6)
+    with pytest.raises(ValueError):
+        degrade(base, capacity_factor=0.0)
+    with pytest.raises(ValueError):
+        degrade(base, latency_factor=0.5)
+
+
+def test_cluster_live_replica_pool():
+    sim = ClusterSim(COST, ClusterConfig(n_replicas=2, max_batch=4,
+                                         batch_window_s=1e-3))
+    for i in range(40):
+        sim.offer(i, 0.001 * i)
+    sim.run(until=0.01)
+    assert sim.n_replicas == 2
+    sim.set_replicas(1)                        # graceful shrink mid-run
+    assert sim.n_replicas == 1
+    sim.set_replicas(3)                        # recovery grows the pool
+    assert sim.n_replicas == 3
+    stats = sim.run()
+    assert len(stats.served) == 40 and stats.dropped == 0
+
+
+def test_schedule_faults_on_live_cluster():
+    sc = RegimeChangeTrace.from_phases(
+        _mix(), [Phase(1.0, 200.0)], seed=2,
+        replica_events=[ReplicaEvent(0.3, -1), ReplicaEvent(0.6, +1)],
+        link_events=[LinkDegradation(0.5, capacity_factor=0.5)],
+        replica_pool=2)
+    sim = ClusterSim(COST, ClusterConfig(n_replicas=2, max_batch=4,
+                                         batch_window_s=1e-3))
+    seen = []
+    schedule_faults(sc, sim, on_link_change=lambda t, name, ch:
+                    seen.append((t, name, ch.capacity_bps)))
+    for i, r in enumerate(sc.trace.requests):
+        sim.offer(i, r.t_arrival)
+    sim.run(until=0.4)
+    assert sim.n_replicas == 1                 # failure applied in place
+    sim.run()
+    assert sim.n_replicas == 2                 # recovery applied
+    assert seen == [(0.5, "edge-embedded", pytest.approx(50e6))]
+    assert sc.available_replicas(0.4) == 1
+    assert sc.available_replicas(0.7) == 2
+
+
+# ----------------------------------------------- the control loop itself ----
+def test_engines_make_identical_switch_decisions(rush_calm, controller):
+    rv = controller.run(rush_calm, engine="vectorized")
+    re = controller.run(rush_calm, engine="event")
+    assert rv.plan_keys == re.plan_keys
+    assert len(rv.plan_keys) >= 2              # it did adapt
+    assert [(s.t_s, s.from_key, s.to_key, s.reason, s.forced)
+            for s in rv.switches] == \
+           [(s.t_s, s.from_key, s.to_key, s.reason, s.forced)
+            for s in re.switches]
+    assert rv.migration == re.migration
+    assert rv.dropped == re.dropped
+    assert (rv.n_decisions, rv.n_replans, rv.n_suppressed) == \
+           (re.n_decisions, re.n_replans, re.n_suppressed)
+    # latencies agree to the standing cross-engine percentile tolerance
+    assert rv.p99_s == pytest.approx(re.p99_s, rel=1e-6)
+    assert len(rv.latencies) == len(re.latencies)
+
+
+def test_adaptive_beats_best_static(rush_calm, controller):
+    adaptive = controller.run(rush_calm, engine="vectorized")
+    static = controller.best_static(rush_calm)
+    assert adaptive.drop_fraction == 0.0
+    assert static.p99_s > 1.5 * adaptive.p99_s
+    # the win comes from down-shifting after the rush, not from drops
+    assert adaptive.plan_keys[0] in ("b8", "b64")
+    assert adaptive.plan_keys[-1] == "b1"
+
+
+def test_migration_disruption_is_explicit(rush_calm, controller):
+    res = controller.run(rush_calm, engine="vectorized")
+    sw = [s for s in res.switches if not s.forced]
+    assert sw and res.migration["n_delayed"] > 0
+    assert res.migration["added_delay_s"] > 0.0
+    assert res.migration["n_delayed"] == sum(s.n_delayed for s in sw)
+    # warm-up can never delay anyone longer than warmup_s each
+    assert res.migration["added_delay_s"] <= \
+        res.migration["n_delayed"] * controller.config.warmup_s + 1e-12
+    # switches record the prices hysteresis compared
+    assert sw[0].predicted_p99_s < sw[0].incumbent_p99_s
+
+
+def test_no_warmup_no_disruption(rush_calm):
+    cfg = ControllerConfig(control_period_s=0.25, drift_threshold=0.3,
+                           min_improvement=0.05, warmup_s=0.0)
+    ctl = AdaptiveController(_cands(), config=cfg)
+    res = ctl.run(rush_calm, engine="vectorized")
+    assert res.n_switches >= 1
+    assert res.migration == {"n_delayed": 0, "added_delay_s": 0.0}
+
+
+def test_max_switches_is_a_hard_cap():
+    # hostile flapping workload: the rate alternates every second
+    phases = [Phase(1.0, 20000.0 if i % 2 == 0 else 1500.0)
+              for i in range(6)]
+    sc = RegimeChangeTrace.from_phases(_mix(), phases, seed=11)
+    cfg = ControllerConfig(control_period_s=0.25, drift_threshold=0.3,
+                           min_improvement=0.0, max_switches=1)
+    ctl = AdaptiveController(_cands(), config=cfg)
+    res = ctl.run(sc, engine="vectorized")
+    assert res.n_switches <= 1
+    assert res.n_suppressed >= 1               # the cap visibly bit
+
+
+def test_cooldown_spaces_switches():
+    phases = [Phase(1.0, 20000.0 if i % 2 == 0 else 1500.0)
+              for i in range(6)]
+    sc = RegimeChangeTrace.from_phases(_mix(), phases, seed=11)
+    cfg = ControllerConfig(control_period_s=0.25, drift_threshold=0.3,
+                           min_improvement=0.0, cooldown_s=2.0,
+                           max_switches=50)
+    res = AdaptiveController(_cands(), config=cfg).run(sc)
+    ts = [s.t_s for s in res.switches if not s.forced]
+    assert all(b - a >= 2.0 for a, b in zip(ts, ts[1:]))
+
+
+def test_disabled_triggers_make_adaptive_a_noop(rush_calm):
+    cfg = ControllerConfig(control_period_s=0.25, drift_threshold=None,
+                           drop_trigger=None, queue_trigger=None)
+    ctl = AdaptiveController(_cands(), config=cfg)
+    for engine in ("vectorized", "event"):
+        a = ctl.run(rush_calm, initial="b64", engine=engine)
+        s = ctl.run_static(rush_calm, "b64", engine=engine)
+        assert np.array_equal(a.latencies, s.latencies)
+        assert a.plan_keys == s.plan_keys == ("b64",)
+        assert a.n_switches == 0 and a.n_replans == 0
+
+
+def test_replica_failure_forces_reconfig_without_counting():
+    sc = RegimeChangeTrace.from_phases(
+        _mix(), [Phase(3.0, 2000.0)], seed=5,
+        replica_events=[ReplicaEvent(1.0, -1), ReplicaEvent(2.0, +1)],
+        replica_pool=2)
+    cands = [CandidatePlan("b8r2", "SC@3", 3, "tcp", 8, 2, 5e-3, COST)]
+    cfg = ControllerConfig(control_period_s=0.5, drift_threshold=None,
+                           drop_trigger=None)
+    ctl = AdaptiveController(cands, config=cfg)
+    rv = ctl.run(sc, engine="vectorized")
+    re = ctl.run(sc, engine="event")
+    assert rv.plan_keys == re.plan_keys == ("b8r2",) * 3
+    assert rv.n_forced == re.n_forced == 2
+    assert rv.n_switches == 0                  # physics is not policy
+    assert [e.n_replicas for e in rv.eras] == [2, 1, 2]
+    assert [e.n_replicas for e in re.eras] == [2, 1, 2]
+    assert all(s.forced for s in rv.switches)
+
+
+def test_link_degradation_reprices_flows():
+    # wire-aware flow: the pre-delay stretches when the link degrades
+    def flow_fn(device, cand, proto):
+        wire = device.channel.latency_s + \
+            8000 * 8.0 / device.channel.effective_bps
+        return {"edge_s": 1e-4, "wire_s": np.array([wire]),
+                "wire_bytes": 8000, "accuracy": 0.95}
+
+    sc = RegimeChangeTrace.from_phases(
+        _mix(), [Phase(2.0, 500.0)], seed=9,
+        link_events=[LinkDegradation(1.0, capacity_factor=0.05,
+                                     latency_factor=10.0)])
+    cfg = ControllerConfig(control_period_s=0.25, drift_threshold=None,
+                           drop_trigger=None)
+    ctl = AdaptiveController(_cands(), config=cfg, flow_fn=flow_fn)
+    rv = ctl.run(sc, initial="b1", engine="vectorized")
+    re = ctl.run(sc, initial="b1", engine="event")
+    # the fault fired a replan on both engines
+    assert rv.n_replans == re.n_replans >= 1
+    assert rv.plan_keys == re.plan_keys
+    # latency visibly jumps after the degradation: the per-arrival wire
+    # pricing picked up the new regime
+    t_cut = 1.0
+    t_arr = sc.trace.arrival_times()
+    n_before = int((t_arr < t_cut).sum())
+    lat = rv.latencies
+    assert len(lat) == len(t_arr)
+    assert np.median(lat[n_before:]) > 4 * np.median(lat[:n_before])
+
+
+def test_drop_trigger_rescues_an_overloaded_plan():
+    # calm then rush, pinned to the small batch: queue overflows, the
+    # drop trigger fires, and the controller escapes to the big batch
+    sc = RegimeChangeTrace.from_phases(
+        _mix(), [Phase(1.0, 1500.0), Phase(2.0, 20000.0)], seed=13)
+    cands = [CandidatePlan("b1", "SC@3", 3, "tcp", 1, 1, 5e-3, COST,
+                           queue_limit=256),
+             CandidatePlan("b64", "SC@3", 3, "tcp", 64, 1, 5e-3, COST,
+                           queue_limit=256)]
+    cfg = ControllerConfig(control_period_s=0.25, drift_threshold=None,
+                           drop_trigger=0.0, min_improvement=0.0)
+    ctl = AdaptiveController(cands, config=cfg)
+    rv = ctl.run(sc, initial="b1", engine="vectorized")
+    re = ctl.run(sc, initial="b1", engine="event")
+    assert rv.plan_keys == re.plan_keys
+    assert rv.plan_keys[-1] == "b64"
+    assert any(s.reason == "drops" for s in rv.switches)
+    assert rv.dropped == re.dropped > 0
+
+
+def test_controller_telemetry(rush_calm):
+    from repro.obs import Recorder
+    obs = Recorder()
+    cfg = ControllerConfig(control_period_s=0.25, drift_threshold=0.3,
+                           min_improvement=0.05, warmup_s=0.02)
+    ctl = AdaptiveController(_cands(), config=cfg, obs=obs)
+    res = ctl.run(rush_calm, engine="vectorized")
+    snap = obs.metrics.snapshot()
+    assert snap["controller.decisions"] == res.n_decisions
+    assert snap["controller.replans"] == res.n_replans
+    assert snap["controller.switches"] == res.n_switches
+    ts, vs = obs.metrics.timeseries("controller.rate_hz")
+    assert len(ts) == res.n_decisions and (vs > 0).all()
+    names = [s.name for s in obs.tracer.spans]
+    assert "replan" in names and "switch" in names
+    assert any(n.startswith("era[") for n in names)
+
+
+def test_bad_inputs_rejected(rush_calm, controller):
+    with pytest.raises(ValueError):
+        AdaptiveController([])
+    with pytest.raises(ValueError):
+        AdaptiveController(_cands() + [_cands()[0]])   # duplicate key
+    with pytest.raises(ValueError):
+        controller.run(rush_calm, engine="fluid")
+
+
+def test_from_planner_grid(vgg_small):
+    from repro.fleet import DeploymentPlanner, SearchSpace
+    model, params = vgg_small
+    fi = list(model.cut_points())
+    planner = DeploymentPlanner(
+        model, params, cs_curve=np.linspace(1.0, 0.3, len(fi)),
+        layer_idx=fi, accuracy_fn=lambda s, n: 0.9, input_bytes=3072,
+        n_frames=2)
+    space = SearchSpace(split_points=tuple(fi), batch_sizes=(1, 8),
+                        replica_counts=(1,), top_k_splits=1,
+                        include_rc=True)
+    ctl = AdaptiveController.from_planner(
+        planner, space,
+        config=ControllerConfig(control_period_s=0.25,
+                                drift_threshold=0.3))
+    # 2 candidates (1 split + RC) x 2 protocols x 2 batches x 1 replica
+    assert len(ctl.candidates) == 8
+    sc = RegimeChangeTrace.from_phases(
+        _mix(), [Phase(0.5, 300.0), Phase(0.5, 40.0)], seed=1)
+    rv = ctl.run(sc, engine="vectorized")
+    re = ctl.run(sc, engine="event")
+    assert rv.plan_keys == re.plan_keys
+    assert rv.n_offered == len(sc.trace)
+    assert rv.drop_fraction == 0.0
+
+
+def test_study_adapt(vgg_small, toy_data):
+    from repro.api import Study
+    from repro.api.study import StudyScenario
+    model, params = vgg_small
+    xs, ys = toy_data
+    study = Study(model=model, params=params, data=(xs[:8], ys[:8]),
+                  scenario=StudyScenario(channel=CHANNEL))
+    sc = RegimeChangeTrace.from_phases(
+        _mix(), [Phase(0.5, 300.0), Phase(0.5, 40.0)], seed=1)
+    out = study.adapt(sc, batch_sizes=(1, 4), replica_counts=(1,),
+                      top_k_splits=1,
+                      config=ControllerConfig(control_period_s=0.25,
+                                              drift_threshold=0.3))
+    assert set(out) == {"adaptive", "static", "controller"}
+    assert out["adaptive"].n_offered == len(sc.trace)
+    assert out["static"].n_switches == 0
+    # the static baseline is the best fixed plan, so adaptive never
+    # loses by more than hysteresis slack on a tiny scenario
+    assert out["adaptive"].p99_s <= out["static"].p99_s * 1.5

@@ -225,3 +225,58 @@ def test_cluster_engines_agree_on_bursty_arrivals(n, rate, seed):
                         queue_limit=32)
     stats = simulate_cluster_vectorized(t, cost, cfg)
     check_against_event_engine(t, cost, cfg, stats)
+
+
+@settings(deadline=None, max_examples=15)
+@given(rates=st.lists(st.floats(200.0, 20_000.0), min_size=2, max_size=4),
+       max_switches=st.integers(0, 3), seed=st.integers(0, 50))
+def test_controller_never_exceeds_max_switches(rates, max_switches, seed):
+    """However hostile the regime changes, voluntary switches stay
+    within the configured bound (forced replica reconfigs excepted —
+    there are none here)."""
+    from repro.fleet import (AdaptiveController, CandidatePlan,
+                             ControllerConfig, DeviceClass, Phase,
+                             RegimeChangeTrace)
+    from repro.serving.engine import BatchCostModel
+    cost = BatchCostModel(flops_per_item=1e7, flops_per_s=1e12,
+                          fixed_overhead_s=2e-4)
+    cands = [CandidatePlan("b1", "SC@3", 3, "tcp", 1, 1, 5e-3, cost),
+             CandidatePlan("b64", "SC@3", 3, "tcp", 64, 1, 5e-3, cost)]
+    mix = (DeviceClass.make("edge-embedded",
+                            Channel(1e-4, 100e6, 100e6, seed=1)),)
+    sc = RegimeChangeTrace.from_phases(
+        mix, [Phase(0.5, r) for r in rates], seed=seed)
+    cfg = ControllerConfig(control_period_s=0.2, drift_threshold=0.2,
+                           min_improvement=0.0,
+                           max_switches=max_switches)
+    res = AdaptiveController(cands, config=cfg).run(sc)
+    assert res.n_switches <= max_switches
+    assert res.n_forced == 0
+
+
+@settings(deadline=None, max_examples=10)
+@given(rate=st.floats(200.0, 5_000.0), seed=st.integers(0, 50),
+       engine=st.sampled_from(["vectorized", "event"]))
+def test_controller_with_triggers_disabled_is_exactly_static(rate, seed,
+                                                             engine):
+    """Drift detection off + no faults ⇒ the adaptive run IS the static
+    run, bit-for-bit, on either engine."""
+    from repro.fleet import (AdaptiveController, CandidatePlan,
+                             ControllerConfig, DeviceClass, Phase,
+                             RegimeChangeTrace)
+    from repro.serving.engine import BatchCostModel
+    cost = BatchCostModel(flops_per_item=1e7, flops_per_s=1e12,
+                          fixed_overhead_s=2e-4)
+    cands = [CandidatePlan("b1", "SC@3", 3, "tcp", 1, 1, 5e-3, cost),
+             CandidatePlan("b8", "SC@3", 3, "tcp", 8, 1, 5e-3, cost)]
+    mix = (DeviceClass.make("edge-embedded",
+                            Channel(1e-4, 100e6, 100e6, seed=1)),)
+    sc = RegimeChangeTrace.from_phases(mix, [Phase(1.0, rate)], seed=seed)
+    cfg = ControllerConfig(control_period_s=0.25, drift_threshold=None,
+                           drop_trigger=None, queue_trigger=None)
+    ctl = AdaptiveController(cands, config=cfg)
+    a = ctl.run(sc, initial="b8", engine=engine)
+    s = ctl.run_static(sc, "b8", engine=engine)
+    assert np.array_equal(a.latencies, s.latencies)
+    assert a.plan_keys == s.plan_keys == ("b8",)
+    assert a.n_switches == 0 and a.n_replans == 0

@@ -274,8 +274,7 @@ def test_planner_measured_cost_source(cal_setup):
     input_bytes = 8 * 8 * 3 * 4
     planner = DeploymentPlanner(model, params, cs_curve=cs, layer_idx=fi,
                                 accuracy_fn=accuracy_fn,
-                                input_bytes=input_bytes,
-                                cost_source="measured", calibration=table)
+                                input_bytes=input_bytes, cost=table)
     mix = [DeviceClass.make("edge-embedded",
                             Channel(5e-4, 100e6, 100e6, seed=2))]
     trace = generate_trace(mix, 50, 20.0, seed=0)
@@ -290,11 +289,8 @@ def test_planner_measured_cost_source(cal_setup):
                             points=points)
     assert plans["edge-embedded"] is not None
 
-    with pytest.raises(ValueError, match="cost_source"):
+    # the deprecated cost_source=/calibration= pair is gone for good
+    with pytest.raises(TypeError):
         DeploymentPlanner(model, params, cs_curve=cs, layer_idx=fi,
                           accuracy_fn=accuracy_fn, input_bytes=input_bytes,
-                          cost_source="wall-clock")
-    with pytest.raises(ValueError, match="calibration"):
-        DeploymentPlanner(model, params, cs_curve=cs, layer_idx=fi,
-                          accuracy_fn=accuracy_fn, input_bytes=input_bytes,
-                          cost_source="measured")
+                          cost_source="measured", calibration=table)
