@@ -45,9 +45,16 @@ GATE_SPECS = {
     # err_pct metrics are ratios of wall-clock measurements: the absolute
     # ceiling is the gate (a broken calibration path shows 100%+ errors),
     # relative drift is effectively unbounded so runner load can't flap it
+    # the boundary-overhead cut is a wall-clock ratio measured
+    # back-to-back inside the bench, where its >=20% floor (and the
+    # payload bit-identity) is asserted; here it is presence-checked so
+    # the metric can't silently vanish, while fused_bit_identical is a
+    # deterministic 1.0 and gates exactly
     "runtime": [
         ("max_err_measured_pct", "lower", float("inf"), 45.0),
         ("mean_err_measured_pct", "lower", float("inf"), 30.0),
+        ("boundary.overhead_cut_pct", "higher", float("inf"), None),
+        ("boundary.fused_bit_identical", "higher", 0.001, None),
     ],
     # the repro.api facade must stay (near) zero-cost over hand-stitched
     # calls: overhead is a ratio of two wall clocks on the same workload,

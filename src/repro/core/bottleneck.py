@@ -62,6 +62,9 @@ def encode_wire(ae: dict, f: jax.Array, scale: float = 127.0) -> tuple:
 
 
 def decode_wire(ae: dict, q: jax.Array, s: jax.Array) -> jax.Array:
+    """Dequantise + decoder (what the Pallas ``bottleneck_decompress``
+    kernel fuses on TPU; the runtime routes through
+    ``kernels.bottleneck_decompress.bottleneck_decompress_any``)."""
     return decode(ae, q.astype(jnp.float32) * s)
 
 

@@ -51,9 +51,9 @@ def resolve_backend(backend: str | None = None) -> str:
     return backend
 
 
-def _compiler_params():
+def _compiler_params(semantics: tuple = ("parallel", "arbitrary")):
     cp = getattr(pltpu, "CompilerParams", None) or getattr(pltpu, "TPUCompilerParams")
-    return cp(dimension_semantics=("parallel", "arbitrary"))
+    return cp(dimension_semantics=semantics)
 
 
 def _kernel(f_ref, w_ref, b_ref, q_ref, s_ref, acc, *, nc: int, scale: float):

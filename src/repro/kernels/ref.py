@@ -48,6 +48,17 @@ def bottleneck_decompress_ref(q, s):
     return q.astype(jnp.float32) * s
 
 
+def bottleneck_decode_ref(q, s, w, b):
+    """Fused wire dequantisation + AE-decoder projection (the mirror of
+    :func:`bottleneck_compress_ref` on the receiving stage).
+
+    q: (N, L) int8 wire codes; s: (N, 1) f32 row scales; w: (L, C); b: (C,).
+    Returns the reconstructed boundary activation f32 (N, C).
+    """
+    z = q.astype(jnp.float32) * s.astype(jnp.float32)
+    return z @ w.astype(jnp.float32) + b.astype(jnp.float32)
+
+
 def rwkv6_scan_ref(r, k, v, w, u, state):
     """Sequential WKV-6 recurrence (B,S,H,D) f32; u (H,D); state (B,H,D,D).
 

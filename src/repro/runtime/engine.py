@@ -64,6 +64,11 @@ class RuntimeResult:
     as a span tree (``infer`` -> ``stage{k}`` -> ``encode``/``transfer``/
     ``decode`` per hop) on a reconstructed timeline, so an executed run
     and a simulated one are comparable span-by-span in Perfetto.
+
+    ``total_s`` is **transfer-inclusive** — ``compute_s + transfer_s``,
+    i.e. stages + codec + the netsim-priced wire time — and reconciles
+    exactly with the root span of :func:`build_infer_spans` (pinned by a
+    regression test; a device-only latency lives in ``compute_s``).
     """
     logits: np.ndarray
     split_layer: int                 # first (edge-side) cut
@@ -136,16 +141,26 @@ class SplitRuntime:
     ``wire_kind`` per hop: 'ae8' when that cut has an AE, else 'int8'
     ('f32' for the exactness oracle).  ``ae`` may be one AE dict (first
     cut) or a ``{cut: ae}`` map.
+
+    ``fused=True`` switches the execution to the fused-boundary path
+    (``Partition.fused_segments``): each leg is ONE jitted callable with
+    the wire encode fused as the stage epilogue and the decode as the
+    next stage's prologue, so the only host-side work per hop is the
+    zero-copy byte framing and the parse.  The payload bytes are
+    bit-identical to the eager path — ``fused`` changes where time goes
+    (hop ``encode_s``/``decode_s`` shrink to framing/parse; the codec
+    compute moves into ``stage_s``), never the numbers on the wire.
     """
 
     def __init__(self, model, params, split_layer, *,
                  ae: Optional[dict] = None,
                  channel=None, protocol: str = "tcp",
                  quantize: bool = True, backend: Optional[str] = None,
-                 obs=None):
+                 fused: bool = False, obs=None):
         self.part: Partition = make_partition(model, params, split_layer, ae)
         self.channel, self.protocol = channel, protocol
         self.quantize, self.backend = quantize, backend
+        self.fused = fused
         self.hops = self._resolve_hops(channel, protocol)
         self.obs = NULL if obs is None else obs
 
@@ -173,8 +188,35 @@ class SplitRuntime:
         return W.encode_activation(f, ae, quantize=self.quantize,
                                    backend=self.backend)
 
+    def _price_hop(self, k: int, nbytes: int, stream: int) -> tuple:
+        """netsim-priced transfer of hop k: (transfer_s, transport meta)."""
+        if self.hops[k] is None:
+            return 0.0, {}
+        proto, ch = self.hops[k]
+        tr = simulate_transfer(proto, nbytes, ch, stream=stream + 137 * k)
+        return tr.duration_s, {"n_packets": tr.n_packets,
+                               "n_transmissions": tr.n_transmissions,
+                               "loss_fraction": tr.loss_fraction}
+
+    @staticmethod
+    def _parse(buf: bytes) -> tuple:
+        """Wire bytes -> boundary pytree, rebuilt per call: the fused
+        segments donate their boundary input, so a parse is single-use."""
+        return W.parse_arrays(buf)
+
     def infer(self, x, *, iters: int = 3, stream: int = 0) -> RuntimeResult:
         """Timed stage -> wire -> stage ... execution of one input batch."""
+        if self.fused:
+            logits, stage_s, hops = self._run_fused(x, iters=iters,
+                                                    stream=stream)
+        else:
+            logits, stage_s, hops = self._run_eager(x, iters=iters,
+                                                    stream=stream)
+        return self._package(logits, stage_s, hops)
+
+    def _run_eager(self, x, *, iters: int, stream: int) -> tuple:
+        """Historical op-by-op path: stage jit, then codec on the host
+        (the exactness + accounting oracle for the fused path)."""
         cur = jnp.asarray(x)
         stage_s, hops = [], []
         for k in range(self.part.n_stages):
@@ -185,22 +227,48 @@ class SplitRuntime:
             ae_k = self.part.ae_map.get(self.part.splits[k])
             encode_s, buf = timeit_blocked(
                 lambda v: W.to_bytes(self._encode(v, ae_k)), cur, iters=iters)
-            transfer_s, meta = 0.0, {}
-            if self.hops[k] is not None:
-                proto, ch = self.hops[k]
-                tr = simulate_transfer(proto, len(buf), ch,
-                                       stream=stream + 137 * k)
-                transfer_s = tr.duration_s
-                meta = {"n_packets": tr.n_packets,
-                        "n_transmissions": tr.n_transmissions,
-                        "loss_fraction": tr.loss_fraction}
+            transfer_s, meta = self._price_hop(k, len(buf), stream)
             decode_s, cur = timeit_blocked(
                 lambda b: W.decode_activation(W.from_bytes(b), ae_k),
                 buf, iters=iters)
             hops.append({"cut": self.part.splits[k], "bytes": len(buf),
                          "encode_s": encode_s, "transfer_s": transfer_s,
                          "decode_s": decode_s, **meta})
-        logits = cur
+        return cur, stage_s, hops
+
+    def _run_fused(self, x, *, iters: int, stream: int) -> tuple:
+        """Fused-boundary path: one jitted wire-to-wire segment per leg.
+
+        Accounting: the codec compute is inside the segments, so
+        ``stage_s[k]`` absorbs it; hop ``encode_s`` is just the zero-copy
+        framing and ``decode_s`` just the byte parse.  The middle/last
+        legs are timed as ``seg(parse(buf))`` (fresh boundary arrays per
+        call — the segments donate their input) and the parse time is
+        measured separately and subtracted, so the split between
+        ``decode_s`` and ``stage_s`` stays honest.
+        """
+        segs = self.part.fused_segments(quantize=self.quantize,
+                                        backend=self.backend)
+        kinds = self.part.wire_kinds(self.quantize)
+        stage_s, hops = [], []
+        s0, out = timeit_blocked(segs[0], jnp.asarray(x), iters=iters)
+        stage_s.append(s0)
+        for k in range(len(self.part.splits)):
+            encode_s, buf = timeit_blocked(
+                lambda d, s, kk=k: W.frame_arrays(kinds[kk], d, s),
+                out[0], out[1], iters=iters)
+            transfer_s, meta = self._price_hop(k, len(buf), stream)
+            parse_s, _ = timeit_blocked(self._parse, buf, iters=iters)
+            leg_s, out = timeit_blocked(
+                lambda b, kk=k: segs[kk + 1](self._parse(b)),
+                buf, iters=iters)
+            stage_s.append(max(0.0, leg_s - parse_s))
+            hops.append({"cut": self.part.splits[k], "bytes": len(buf),
+                         "encode_s": encode_s, "transfer_s": transfer_s,
+                         "decode_s": parse_s, **meta})
+        return out, stage_s, hops
+
+    def _package(self, logits, stage_s, hops) -> RuntimeResult:
         result = RuntimeResult(
             np.asarray(logits), self.part.split_layer,
             stage_s[0],
@@ -209,7 +277,8 @@ class SplitRuntime:
             sum(h["decode_s"] for h in hops),
             sum(stage_s[1:]),
             sum(h["bytes"] for h in hops),
-            dict(hops[0]) if len(hops) == 1 else {"hops": hops},
+            {**(dict(hops[0]) if len(hops) == 1 else {"hops": hops}),
+             "fused": self.fused},
             splits=self.part.splits, stage_s=tuple(stage_s),
             hops=tuple(hops))
         obs = self.obs

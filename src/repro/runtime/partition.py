@@ -24,6 +24,7 @@ import jax
 from repro.core import bottleneck as B
 from repro.core.split import validate_cuts
 from repro.models.layered import LayeredModel
+from repro.runtime import wire as W
 
 
 def _is_single_ae(ae: dict) -> bool:
@@ -51,6 +52,7 @@ class Partition:
     ae: Optional[dict] = None
     _stages: list = field(default=None, repr=False)
     _tail: object = field(default=None, repr=False)
+    _fused: dict = field(default_factory=dict, repr=False)
 
     def __post_init__(self):
         self.splits = validate_cuts(self.model, self.split_layer)
@@ -98,6 +100,111 @@ class Partition:
         for s in self._stages:
             x = s(x)
         return x
+
+    # ----------------------------------------------------- fused boundary ----
+    def wire_kinds(self, quantize: bool = True) -> tuple:
+        """Per-hop payload kind ('f32' | 'int8' | 'ae8') — static given
+        the AE map and the quantize flag."""
+        return tuple(W.wire_kind(self.ae_map.get(c), quantize)
+                     for c in self.splits)
+
+    def fused_segments(self, *, quantize: bool = True,
+                       backend: Optional[str] = None,
+                       shard_fn=None) -> list:
+        """K+1 wire-to-wire jitted callables: the fused-boundary runtime.
+
+        Where :meth:`stage` callables map activation -> activation and
+        leave the codec to the caller (the eager path, one host
+        round-trip per leg), each fused segment runs its layers *and*
+        the boundary codec in ONE jitted program:
+
+        * segment 0: ``x -> (data, scales)`` — stage-0 layers with the
+          hop-0 encode (projection + ReLU + per-row amax + int8 for
+          'ae8') fused as the stage epilogue, so the f32 latent never
+          leaves the device between the last layer and the quantiser;
+        * middle segment k: ``(data, scales) -> (data, scales)`` — hop
+          k-1 decode (dequantise + AE-decoder) as the stage prologue,
+          the stage layers, then the hop-k encode epilogue;
+        * last segment: ``(data, scales) -> logits``.
+
+        Boundary inputs are **donated** (the int8 codes + scales buffers
+        are dead once decoded, so XLA may reuse them) — a segment must
+        therefore be fed freshly parsed arrays on every call.  Segments
+        are cached per ``(quantize, backend)``; byte framing stays
+        outside (``wire.frame_arrays`` writes the header around the
+        kernel output).  ``fused == eager`` to int8 bit-identity is the
+        contract tests enforce (see ``tests/test_fused_boundary.py``).
+
+        ``shard_fn`` (a ``sharding.rules.make_shard_fn`` hook) pins the
+        boundary tensors inside the jitted segments — kinds
+        ``boundary_codes`` / ``boundary_scales``, batch-row sharded so a
+        row's codes and its scale co-locate.
+        """
+        key = (quantize, backend, shard_fn)
+        if key not in self._fused:
+            self._fused[key] = self._build_fused(quantize, backend, shard_fn)
+        return self._fused[key]
+
+    def _build_fused(self, quantize: bool, backend: Optional[str],
+                     shard_fn=None) -> list:
+        m, p = self.model, self.params
+        bounds = (0,) + tuple(c + 1 for c in self.splits) + (len(m.layers),)
+        aes = [self.ae_map.get(c) for c in self.splits]
+        kinds = self.wire_kinds(quantize)
+        # Donation is a no-op on hosts without buffer aliasing (CPU XLA
+        # warns and ignores it) — only request it where it can land.
+        donate = (0,) if jax.devices()[0].platform != "cpu" else ()
+
+        # The barrier pins the codec subgraph: XLA may not fold stage
+        # layers into the quantiser's float math (or vice versa), which
+        # is what keeps the payload bit-identical to the eager byte path
+        # (wire._encode_jit / _decode_jit compile the same subgraph).
+        def pin(data, scales):
+            if shard_fn is None:
+                return data, scales
+            data = shard_fn(data, "boundary_codes")
+            if scales is not None:
+                scales = shard_fn(scales, "boundary_scales")
+            return data, scales
+
+        def enc(f, k):
+            return pin(*W.encode_arrays(jax.lax.optimization_barrier(f),
+                                        aes[k], quantize=quantize,
+                                        backend=backend))
+
+        def dec(boundary, k):
+            data, scales = pin(*boundary)
+            return jax.lax.optimization_barrier(
+                W.decode_arrays(kinds[k], data, scales, aes[k],
+                                backend=backend))
+
+        n = len(self.splits)
+        segs = [jax.jit(lambda x, b=bounds[1]:
+                        enc(m.apply_range(p, x, 0, b), 0))]
+        for k in range(1, n + 1):
+            a, b = bounds[k], bounds[k + 1]
+            if k < n:
+                segs.append(jax.jit(
+                    lambda bd, a=a, b=b, k=k:
+                        enc(m.apply_range(p, dec(bd, k - 1), a, b), k),
+                    donate_argnums=donate))
+            else:
+                segs.append(jax.jit(
+                    lambda bd, a=a, b=b, k=k:
+                        m.apply_range(p, dec(bd, k - 1), a, b),
+                    donate_argnums=donate))
+        return segs
+
+    def fused_forward(self, x: jax.Array, *, quantize: bool = True,
+                      backend: Optional[str] = None) -> jax.Array:
+        """Run the whole fused segment chain (no byte framing) — the
+        device-only equivalent of :meth:`forward_stages` on the fused
+        path."""
+        segs = self.fused_segments(quantize=quantize, backend=backend)
+        cur = segs[0](x)
+        for seg in segs[1:]:
+            cur = seg(cur)
+        return cur
 
     # ------------------------------------------------------------ shapes ----
     def boundary_shape(self, batch: int = 1, hop: int = 0) -> tuple:

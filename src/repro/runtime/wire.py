@@ -13,9 +13,24 @@ so the tail server can decode without out-of-band shape agreement:
 
 Decoding reverses the chain on the server: parse -> dequantise -> (AE
 decoder) -> boundary activation for ``Partition.tail``.
+
+The codec exists at two altitudes:
+
+* **array layer** (:func:`encode_arrays` / :func:`decode_arrays`) —
+  pure-JAX, jittable transforms between the boundary activation and the
+  device-resident wire tensors ``(data, scales)``.  This is what
+  ``Partition.fused_segments`` closes over so encode fuses into the tail
+  of a stage and decode into the head of the next.
+* **byte layer** (:func:`frame_arrays` / :func:`to_bytes` /
+  :func:`from_bytes`) — the self-describing framing.  ``frame_arrays``
+  is the zero-copy path: the header is written *around* the kernel's
+  int8 + scales output (one ``b"".join`` over buffer views, no
+  intermediate numpy copies), and ``from_bytes`` parses into views over
+  the received buffer.
 """
 from __future__ import annotations
 
+import functools
 import struct
 from dataclasses import dataclass
 from typing import Optional
@@ -24,11 +39,21 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import bottleneck as B
 from repro.kernels.bottleneck_compress import bottleneck_compress_any
+from repro.kernels.bottleneck_decompress import bottleneck_decompress_any
 
 MAGIC = b"SEI1"
 _KINDS = ("f32", "int8", "ae8")
+
+_KIND_DTYPE = {"f32": np.float32, "int8": np.int8, "ae8": np.int8}
+
+
+def wire_kind(ae: Optional[dict], quantize: bool = True) -> str:
+    """The payload kind one hop ships: 'ae8' when the cut has an AE,
+    else 'int8' ('f32' with ``quantize=False``)."""
+    if ae is not None:
+        return "ae8"
+    return "int8" if quantize else "f32"
 
 
 @dataclass(frozen=True)
@@ -46,6 +71,68 @@ class WirePacket:
         return n + (self.scales.nbytes if self.scales is not None else 0)
 
 
+# ------------------------------------------------------------ array layer ----
+def encode_arrays(f: jax.Array, ae: Optional[dict] = None, *,
+                  quantize: bool = True,
+                  backend: Optional[str] = None) -> tuple:
+    """Jittable edge-side codec core: activation -> ``(data, scales)``.
+
+    The wire tensors stay on device: int8 codes + f32 ``(N, 1)`` row
+    scales for the quantised kinds, ``(f32 data, None)`` for 'f32'.  The
+    kind itself is a static function of ``(ae, quantize)`` —
+    :func:`wire_kind` — so a jitted closure over fixed ``ae`` traces one
+    payload layout.
+    """
+    if ae is not None:
+        q, s = bottleneck_compress_any(
+            jnp.asarray(f, jnp.float32), ae["enc"]["w"], ae["enc"]["b"],
+            backend=backend)
+        return q, s.reshape(-1, 1)
+    if not quantize:
+        return jnp.asarray(f, jnp.float32), None
+    q, s = _quantize_rows(jnp.asarray(f, jnp.float32))
+    return q, s.reshape(-1, 1)
+
+
+def decode_arrays(kind: str, data: jax.Array, scales: Optional[jax.Array],
+                  ae: Optional[dict] = None, *,
+                  backend: Optional[str] = None) -> jax.Array:
+    """Jittable server-side codec core: ``(data, scales)`` -> activation.
+
+    'ae8' routes dequantise + AE-decoder through the fused
+    ``bottleneck_decompress`` kernel path (pure-JAX reference off-TPU),
+    so composing this with the next stage's layers under one ``jit``
+    keeps the f32 latent in VMEM.
+    """
+    if kind == "f32":
+        return jnp.asarray(data)
+    shape = tuple(data.shape)
+    if kind == "ae8":
+        if ae is None:
+            raise ValueError("ae8 payload needs the bottleneck AE to decode")
+        return bottleneck_decompress_any(
+            jnp.asarray(data), jnp.asarray(scales).reshape(-1, 1),
+            ae["dec"]["w"], ae["dec"]["b"], backend=backend)
+    z = (jnp.asarray(data).reshape(-1, shape[-1]).astype(jnp.float32)
+         * jnp.asarray(scales).reshape(-1, 1))
+    return z.reshape(shape)
+
+
+# The byte path runs the SAME compiled codec math as the fused segments.
+# This is what makes ``fused == eager`` hold to the bit: op-by-op dispatch
+# and XLA compile constant divisions differently (1-ulp scale drift), so
+# both paths must go through one jitted core.  ``ae`` is a pytree argument
+# (no retrace per table entry); ``quantize``/``backend`` are static.
+@functools.partial(jax.jit, static_argnames=("quantize", "backend"))
+def _encode_jit(f, ae, *, quantize: bool, backend: Optional[str]):
+    return encode_arrays(f, ae, quantize=quantize, backend=backend)
+
+
+@functools.partial(jax.jit, static_argnames=("kind", "backend"))
+def _decode_jit(kind: str, data, scales, ae, *, backend: Optional[str]):
+    return decode_arrays(kind, data, scales, ae, backend=backend)
+
+
 # ----------------------------------------------------------- encode side ----
 def encode_activation(f: jax.Array, ae: Optional[dict] = None, *,
                       quantize: bool = True,
@@ -56,18 +143,10 @@ def encode_activation(f: jax.Array, ae: Optional[dict] = None, *,
     paper §III with DESIGN.md §3's quantisation).  ``ae`` absent: raw int8
     (kind ``int8``) or raw f32 when ``quantize=False``.
     """
-    if ae is not None:
-        q, s = bottleneck_compress_any(
-            jnp.asarray(f, jnp.float32), ae["enc"]["w"], ae["enc"]["b"],
-            backend=backend)
-        return WirePacket("ae8", tuple(q.shape), np.asarray(q),
-                          np.asarray(s).reshape(-1, 1))
-    if not quantize:
-        return WirePacket("f32", tuple(f.shape),
-                          np.asarray(f, np.float32), None)
-    q, s = _quantize_rows(jnp.asarray(f, jnp.float32))
-    return WirePacket("int8", tuple(q.shape), np.asarray(q),
-                      np.asarray(s).reshape(-1, 1))
+    kind = wire_kind(ae, quantize)
+    data, scales = _encode_jit(f, ae, quantize=quantize, backend=backend)
+    return WirePacket(kind, tuple(data.shape), np.asarray(data),
+                      None if scales is None else np.asarray(scales))
 
 
 def _quantize_rows(f: jax.Array, scale: float = 127.0) -> tuple:
@@ -83,15 +162,50 @@ def _quantize_rows(f: jax.Array, scale: float = 127.0) -> tuple:
 
 
 # ----------------------------------------------------------- byte format ----
+def _header(kind: str, shape: tuple) -> bytes:
+    head = MAGIC + struct.pack("<BB", _KINDS.index(kind), len(shape))
+    return head + struct.pack(f"<{len(shape)}I", *shape)
+
+
+def _buffer_view(a, dtype) -> memoryview:
+    """A C-contiguous byte view over ``a`` without copying when possible
+    (device arrays on CPU backends and contiguous numpy arrays alias)."""
+    arr = np.asarray(a, dtype)
+    if not arr.flags.c_contiguous:
+        arr = np.ascontiguousarray(arr)
+    return memoryview(arr).cast("B", (arr.nbytes,))
+
+
+def frame_arrays(kind: str, data, scales=None) -> bytes:
+    """Zero-copy framing of the jitted path's wire tensors.
+
+    Writes the self-describing header *around* the kernel's
+    ``(data, scales)`` output: the only copy is the single ``join`` into
+    the outgoing buffer — no intermediate ``WirePacket`` and no numpy
+    detour.  ``to_bytes(encode_activation(f, ...))`` and
+    ``frame_arrays(kind, *encode_arrays(f, ...))`` produce identical
+    bytes.
+    """
+    parts = [_header(kind, tuple(data.shape)),
+             _buffer_view(data, _KIND_DTYPE[kind])]
+    if scales is not None:
+        parts.append(_buffer_view(scales, np.float32))
+    return b"".join(parts)
+
+
 def to_bytes(pkt: WirePacket) -> bytes:
     """Serialise: MAGIC | kind u8 | ndim u8 | dims u32* | payload [| scales]."""
-    kind_id = _KINDS.index(pkt.kind)
-    head = MAGIC + struct.pack("<BB", kind_id, len(pkt.shape))
-    head += struct.pack(f"<{len(pkt.shape)}I", *pkt.shape)
-    body = np.ascontiguousarray(pkt.data).tobytes()
-    if pkt.scales is not None:
-        body += np.ascontiguousarray(pkt.scales, np.float32).tobytes()
-    return head + body
+    return frame_arrays(pkt.kind, pkt.data, pkt.scales)
+
+
+def parse_arrays(buf: bytes) -> tuple:
+    """Wire bytes -> device-resident ``(data, scales)`` boundary pytree —
+    the input of a fused segment.  The mirror of :func:`frame_arrays`;
+    callers must re-parse per call when feeding donating segments (the
+    arrays are consumed)."""
+    pkt = from_bytes(buf)
+    return (jnp.asarray(pkt.data),
+            None if pkt.scales is None else jnp.asarray(pkt.scales))
 
 
 def from_bytes(buf: bytes) -> WirePacket:
@@ -106,7 +220,7 @@ def from_bytes(buf: bytes) -> WirePacket:
         data = np.frombuffer(buf, np.float32, n_elems, off).reshape(shape)
         return WirePacket(kind, shape, data, None)
     data = np.frombuffer(buf, np.int8, n_elems, off).reshape(shape)
-    n_rows = n_elems // shape[-1]
+    n_rows = n_elems // shape[-1] if ndim else 0
     scales = np.frombuffer(buf, np.float32, n_rows,
                            off + n_elems).reshape(n_rows, 1)
     return WirePacket(kind, shape, data, scales)
@@ -124,15 +238,11 @@ def decode_activation(pkt: WirePacket, ae: Optional[dict] = None,
     data = pkt.data
     if corrupt_mask is not None:
         data = data * corrupt_mask.reshape(data.shape).astype(data.dtype)
-    if pkt.kind == "f32":
-        return jnp.asarray(data)
-    z2 = data.reshape(-1, pkt.shape[-1]).astype(np.float32) * pkt.scales
-    z = jnp.asarray(z2.reshape(pkt.shape))
-    if pkt.kind == "ae8":
-        if ae is None:
-            raise ValueError("ae8 payload needs the bottleneck AE to decode")
-        return B.decode(ae, z)
-    return z
+    if pkt.kind == "ae8" and ae is None:
+        raise ValueError("ae8 payload needs the bottleneck AE to decode")
+    return _decode_jit(pkt.kind, jnp.asarray(data),
+                       None if pkt.scales is None else jnp.asarray(pkt.scales),
+                       ae, backend=None)
 
 
 def roundtrip(f: jax.Array, ae: Optional[dict] = None, *,

@@ -1,0 +1,196 @@
+"""Fused-boundary runtime contract tests.
+
+The fused path (``Partition.fused_segments`` / ``SplitRuntime(fused=True)``)
+must be indistinguishable from the eager stage-then-codec path on the
+wire: byte-for-byte identical payloads on every hop and bit-identical
+logits — ``fused`` moves work between timing buckets, never changes the
+numbers.  These tests pin that contract, the fused accounting, the
+TailServer interop, the fused calibration fields, and the boundary-tensor
+sharding hook.
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import bottleneck as B
+from repro.runtime import wire as W
+from repro.runtime.calibrate import CalibrationTable, calibrate
+from repro.runtime.engine import SplitRuntime, TailServer
+from repro.runtime.partition import make_partition
+
+
+def _ae_for(model, params, cut, rate=0.5):
+    shapes = model.activation_shapes(params, 1)
+    return B.init_bottleneck(jax.random.PRNGKey(1), shapes[cut], rate=rate)
+
+
+def _eager_chain(part, x, *, quantize=True):
+    """The historical op-by-op wire path; returns (logits, per-hop bufs)."""
+    cur, bufs = jnp.asarray(x), []
+    for k, cut in enumerate(part.splits):
+        cur = part.stage(k)(cur)
+        ae_k = part.ae_map.get(cut)
+        buf = W.to_bytes(W.encode_activation(cur, ae_k, quantize=quantize))
+        bufs.append(buf)
+        cur = W.decode_activation(W.from_bytes(buf), ae_k)
+    return np.asarray(part.stage(len(part.splits))(cur)), bufs
+
+
+def _fused_chain(part, x, *, quantize=True):
+    """Fused segments + byte framing; returns (logits, per-hop bufs)."""
+    segs = part.fused_segments(quantize=quantize)
+    kinds = part.wire_kinds(quantize)
+    out, bufs = segs[0](jnp.asarray(x)), []
+    for k in range(1, len(segs)):
+        bufs.append(W.frame_arrays(kinds[k - 1], out[0], out[1]))
+        out = segs[k](W.parse_arrays(bufs[-1]))
+    return np.asarray(out), bufs
+
+
+@pytest.mark.parametrize("quantize", [True, False])
+def test_fused_payloads_bit_identical_to_eager(vgg_small, toy_data, quantize):
+    """Every hop's wire bytes and the final logits match exactly —
+    across ae8 (first cut), int8 and f32 payload kinds."""
+    model, params = vgg_small
+    xs, _ = toy_data
+    x = jnp.asarray(xs[:4])
+    cuts = model.cut_points()
+    c0, c1 = cuts[1], cuts[3]
+    part = make_partition(model, params, (c0, c1),
+                          ae={c0: _ae_for(model, params, c0)})
+    y_eager, bufs_eager = _eager_chain(part, x, quantize=quantize)
+    y_fused, bufs_fused = _fused_chain(part, x, quantize=quantize)
+    for k, (a, b) in enumerate(zip(bufs_fused, bufs_eager)):
+        assert a == b, f"hop {k} payload diverged ({len(a)} vs {len(b)} B)"
+    np.testing.assert_array_equal(y_fused, y_eager)
+
+
+def test_fused_forward_matches_segment_chain(vgg_small, toy_data):
+    """fused_forward (device-only, no framing) equals the framed chain
+    bit-for-bit: byte framing is lossless."""
+    model, params = vgg_small
+    xs, _ = toy_data
+    x = jnp.asarray(xs[:2])
+    c0 = model.cut_points()[2]
+    part = make_partition(model, params, c0,
+                          ae=_ae_for(model, params, c0))
+    y_chain, _ = _fused_chain(part, x)
+    np.testing.assert_array_equal(np.asarray(part.fused_forward(x)), y_chain)
+
+
+def test_fused_runtime_matches_eager_runtime(vgg_small, toy_data):
+    model, params = vgg_small
+    xs, _ = toy_data
+    x = np.asarray(xs[:4])
+    c0 = model.cut_points()[1]
+    ae = _ae_for(model, params, c0)
+    r_eager = SplitRuntime(model, params, c0, ae=ae).infer(x, iters=1)
+    r_fused = SplitRuntime(model, params, c0, ae=ae, fused=True).infer(
+        x, iters=1)
+    np.testing.assert_array_equal(r_fused.logits, r_eager.logits)
+    assert r_fused.wire_bytes == r_eager.wire_bytes
+    assert r_fused.meta["fused"] and not r_eager.meta["fused"]
+
+
+def test_fused_runtime_accounting_reconciles(vgg_small, toy_data):
+    """stage_s + hop encode/transfer/decode sums to total_s, and the
+    span tree's root duration agrees — same invariant as eager."""
+    from repro.netsim.channel import Channel
+    model, params = vgg_small
+    xs, _ = toy_data
+    ch = Channel(latency_s=0.004, capacity_bps=20e6, interface_bps=100e6)
+    cuts = model.cut_points()
+    rt = SplitRuntime(model, params, (cuts[1], cuts[3]),
+                      ae={cuts[1]: _ae_for(model, params, cuts[1])},
+                      channel=ch, fused=True)
+    res = rt.infer(np.asarray(xs[:2]), iters=1)
+    parts = sum(res.stage_s) + sum(h["encode_s"] + h["transfer_s"]
+                                   + h["decode_s"] for h in res.hops)
+    assert res.transfer_s > 0
+    assert abs(parts - res.total_s) < 1e-12
+    assert abs(res.trace.dur - res.total_s) < 1e-9
+    assert len(res.stage_s) == 3 and len(res.hops) == 2
+
+
+def test_tail_server_serves_fused_payload(vgg_small, toy_data):
+    """A payload framed from a fused segment is a normal wire payload:
+    the (eager) TailServer decodes and serves it unchanged."""
+    model, params = vgg_small
+    xs, _ = toy_data
+    x = jnp.asarray(xs[:2])
+    c0 = model.cut_points()[2]
+    ae = _ae_for(model, params, c0)
+    part = make_partition(model, params, c0, ae=ae)
+    segs = part.fused_segments()
+    out = segs[0](x)
+    buf = W.frame_arrays(part.wire_kinds()[0], out[0], out[1])
+    server = TailServer(part, n_slots=2, client_batch=2)
+    server.submit(0, buf)
+    results = server.drain()
+    eager_buf = W.to_bytes(W.encode_activation(part.head(x), ae))
+    assert buf == eager_buf
+    want = part.tail(W.decode_activation(W.from_bytes(eager_buf), ae))
+    np.testing.assert_allclose(results[0], np.asarray(want), atol=1e-5)
+
+
+def test_calibrate_fused_quotes_fused_costs(vgg_small, tmp_path):
+    model, params = vgg_small
+    c0 = model.cut_points()[1]
+    ae = _ae_for(model, params, c0)
+    t = calibrate(model, params, [c0], ae_map={c0: ae}, batch=2, iters=1,
+                  fused=True)
+    e = t.lookup("SC", c0)
+    assert e.use_fused and e.fused_edge_s > 0 and e.fused_server_s > 0
+    assert e.edge_s == e.fused_edge_s
+    assert e.server_s == e.fused_server_s
+    # eager component times are kept alongside for comparison
+    assert e.head_s > 0 and e.encode_s > 0 and e.decode_s > 0
+    # the CostModel flow interface quotes the fused numbers
+    ft = t.flow_times("SC", c0)
+    assert ft["edge_s"] == e.fused_edge_s
+    # JSON round-trips the new fields; old entries without them load too
+    p = tmp_path / "cal.json"
+    t.to_json(str(p))
+    assert CalibrationTable.from_json(str(p)).lookup("SC", c0) == e
+    doc = json.loads(p.read_text())
+    for entry in doc["entries"].values():
+        for f in ("fused_edge_s", "fused_server_s", "use_fused"):
+            entry.pop(f, None)
+    p.write_text(json.dumps(doc))
+    old = CalibrationTable.from_json(str(p)).lookup("SC", c0)
+    assert not old.use_fused and old.edge_s == old.head_s + old.encode_s
+
+
+def test_boundary_shard_fn_hook(vgg_small, toy_data):
+    """Fused segments accept a sharding.rules shard_fn; on the host mesh
+    the boundary pins are identity and results are unchanged."""
+    from repro.launch.mesh import make_host_mesh
+    from repro.sharding import rules
+    model, params = vgg_small
+    xs, _ = toy_data
+    x = jnp.asarray(xs[:2])
+    c0 = model.cut_points()[2]
+    part = make_partition(model, params, c0,
+                          ae=_ae_for(model, params, c0))
+    sf = rules.make_shard_fn(make_host_mesh())
+    plain = np.asarray(part.fused_forward(x))
+    segs = part.fused_segments(shard_fn=sf)
+    cur = segs[0](x)
+    for s in segs[1:]:
+        cur = s(cur)
+    np.testing.assert_array_equal(np.asarray(cur), plain)
+
+
+def test_boundary_specs_shard_rows_only():
+    """The boundary-tensor rules shard the batch-row axis and leave the
+    latent dim whole, for both codes and scales, at any rank."""
+    from jax.sharding import PartitionSpec as P
+    from repro.sharding import rules
+    for kind in ("boundary_codes", "boundary_scales"):
+        (spec,) = rules.ACT_SPECS[kind]("data")
+        assert tuple(spec) == ("data",)
+    (spec,) = rules.ACT_SPECS["boundary_codes"](("pod", "data"))
+    assert tuple(spec) == (("pod", "data"),)

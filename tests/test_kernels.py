@@ -6,7 +6,10 @@ import numpy as np
 import pytest
 
 from repro.kernels import ops, ref
-from repro.kernels.bottleneck_compress import bottleneck_compress
+from repro.kernels.bottleneck_compress import (bottleneck_compress,
+                                               resolve_backend)
+from repro.kernels.bottleneck_decompress import (bottleneck_decompress,
+                                                 bottleneck_decompress_any)
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.rwkv6_scan import rwkv6_scan
 
@@ -68,6 +71,85 @@ def test_bottleneck_compress_sweep(case):
     # int8 codes may differ by 1 ulp at rounding boundaries
     assert int(jnp.abs(q.astype(jnp.int32) - qr.astype(jnp.int32)).max()) <= 1
     np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=1e-4)
+
+
+def _wire_case(key, n, l, c, dtype):
+    """Random int8 codes + positive row scales + a decoder (L, C)."""
+    ks = jax.random.split(key, 4)
+    q = jax.random.randint(ks[0], (n, l), -127, 128, jnp.int32).astype(jnp.int8)
+    s = (jax.random.uniform(ks[1], (n, 1)) * 0.1 + 1e-3).astype(jnp.float32)
+    w = (jax.random.normal(ks[2], (l, c)) * 0.05).astype(dtype)
+    b = (jax.random.normal(ks[3], (c,)) * 0.1).astype(dtype)
+    return q, s, w, b
+
+
+DECOMPRESS_CASES = [
+    # n, l, c, dtype — MXU-aligned shapes for the raw kernel
+    (128, 64, 256, jnp.float32), (256, 128, 512, jnp.float32),
+    (128, 128, 1024, jnp.bfloat16), (512, 32, 128, jnp.float32),
+]
+
+
+@pytest.mark.parametrize("case", DECOMPRESS_CASES)
+def test_bottleneck_decompress_sweep(case):
+    n, l, c, dtype = case
+    q, s, w, b = _wire_case(jax.random.PRNGKey(n + c), n, l, c, dtype)
+    f = bottleneck_decompress(q, s, w, b, interpret=True)
+    fr = ref.bottleneck_decode_ref(q, s, w, b)
+    assert f.dtype == jnp.float32 and f.shape == (n, c)
+    np.testing.assert_allclose(np.asarray(f), np.asarray(fr), atol=1e-4)
+
+
+ANY_DECODE_CASES = [
+    # lead dims, L, C — odd / non-128-aligned shapes the padding must absorb
+    ((3, 7), 10, 33), ((130,), 24, 600), ((1, 5, 9), 16, 48), ((2,), 1, 1),
+]
+
+
+@pytest.mark.parametrize("case", ANY_DECODE_CASES)
+def test_bottleneck_decompress_any_odd_shapes(case):
+    lead, l, c = case
+    n = int(np.prod(lead))
+    q, s, w, b = _wire_case(jax.random.PRNGKey(n + c), n, l, c, jnp.float32)
+    q, s = q.reshape(lead + (l,)), s.reshape(lead + (1,))
+    out_i = bottleneck_decompress_any(q, s, w, b, backend="interpret")
+    out_r = bottleneck_decompress_any(q, s, w, b, backend="ref")
+    assert out_i.shape == lead + (c,) and out_r.shape == lead + (c,)
+    np.testing.assert_allclose(np.asarray(out_i), np.asarray(out_r),
+                               atol=1e-5)
+
+
+def test_decompress_shares_backend_contract():
+    """The decode kernel routes through the same resolve_backend as the
+    compress side: 'auto' means ref off-TPU, unknown names raise."""
+    q, s, w, b = _wire_case(jax.random.PRNGKey(0), 6, 8, 12, jnp.float32)
+    default = bottleneck_decompress_any(q, s, w, b)      # auto via env
+    explicit = bottleneck_decompress_any(q, s, w, b,
+                                         backend=resolve_backend())
+    np.testing.assert_array_equal(np.asarray(default), np.asarray(explicit))
+    with pytest.raises(ValueError, match="unknown bottleneck backend"):
+        bottleneck_decompress_any(q, s, w, b, backend="bogus")
+
+
+def test_compress_decompress_kernel_roundtrip():
+    """Kernel-path encode -> kernel-path decode stays within the wire
+    quantisation error bound of the float AE round-trip."""
+    ks = jax.random.split(jax.random.PRNGKey(11), 4)
+    f = jax.random.normal(ks[0], (64, 96))
+    we = jax.random.normal(ks[1], (96, 32)) * 0.1
+    be = jnp.zeros((32,))
+    wd = jax.random.normal(ks[2], (32, 96)) * 0.1
+    bd = jax.random.normal(ks[3], (96,)) * 0.1
+    from repro.kernels.bottleneck_compress import bottleneck_compress_any
+    q, s = bottleneck_compress_any(f, we, be, backend="interpret")
+    got = bottleneck_decompress_any(q, s, wd, bd, backend="interpret")
+    z = jax.nn.relu(f @ we + be)
+    want = z @ wd + bd
+    # per-row dequant error <= amax/(2*127); the decoder matmul amplifies
+    # by at most sum |wd| over the latent dim
+    amp = float(jnp.abs(wd).sum(axis=0).max())
+    bound = float(jnp.max(jnp.abs(z))) / 127.0 * 0.5 * amp + 1e-4
+    assert float(jnp.abs(got - want).max()) <= bound
 
 
 def test_compress_roundtrip_error_bound():

@@ -131,6 +131,35 @@ def test_wire_byte_format_roundtrip(b, rows, c, kind, seed):
 
 
 @settings(**SET)
+@given(b=st.integers(1, 4), rows=st.integers(1, 9), c=st.integers(1, 67),
+       kind=st.sampled_from(["f32", "int8", "ae8"]), seed=st.integers(0, 50))
+def test_fused_wire_path_equals_eager(b, rows, c, kind, seed):
+    """Fused boundary contract at the wire level: jitted encode ->
+    zero-copy frame -> parse -> jitted decode produces byte-identical
+    payloads and bit-identical activations vs the eager WirePacket path,
+    for random shapes/batches across every payload kind."""
+    from repro.core import bottleneck as B
+    from repro.runtime import wire as W
+    rng = np.random.default_rng(seed)
+    f = jnp.asarray(rng.standard_normal((b, rows, c)) * 3.0, jnp.float32)
+    ae = (B.init_bottleneck(jax.random.PRNGKey(seed), (c,), rate=0.5)
+          if kind == "ae8" else None)
+    quantize = kind != "f32"
+    assert W.wire_kind(ae, quantize) == kind
+    pkt = W.encode_activation(f, ae, quantize=quantize)
+    buf_eager = W.to_bytes(pkt)
+    out_eager = np.asarray(W.decode_activation(W.from_bytes(buf_eager), ae))
+    enc = jax.jit(lambda v: W.encode_arrays(v, ae, quantize=quantize))
+    data, scales = enc(f)
+    buf_fused = W.frame_arrays(kind, data, scales)
+    assert buf_fused == buf_eager
+    d2, s2 = W.parse_arrays(buf_fused)
+    dec = jax.jit(lambda d, s: W.decode_arrays(kind, d, s, ae))
+    out_fused = np.asarray(dec(d2, s2))
+    np.testing.assert_array_equal(out_fused, out_eager)
+
+
+@settings(**SET)
 @given(n_hops=st.integers(1, 3), n_micro=st.integers(1, 6),
        seed=st.integers(0, 10_000))
 def test_pipeline_closed_form_matches_event_engine(n_hops, n_micro, seed):

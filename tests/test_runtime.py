@@ -158,6 +158,28 @@ def test_runtime_int8_wire_close_and_timed(vgg_small, toy_data):
     assert res.wire_bytes < raw.wire_bytes / 2
 
 
+def test_total_s_is_transfer_inclusive_and_reconciles(vgg_small, toy_data):
+    """Regression pin: ``RuntimeResult.total_s`` includes the netsim-priced
+    transfer time (``compute_s + transfer_s``) and reconciles exactly with
+    the per-stage/per-hop breakdown and the ``build_infer_spans`` root —
+    a dropped ``transfer_s`` would undercount end-to-end latency on every
+    slow link."""
+    from repro.netsim.channel import Channel
+    model, params = vgg_small
+    xs, _ = toy_data
+    # a slow, high-latency link so transfer dominates unambiguously
+    ch = Channel(latency_s=0.05, capacity_bps=1e6, interface_bps=1e6)
+    rt = SplitRuntime(model, params, model.cut_points()[2], channel=ch)
+    res = rt.infer(xs[:2], iters=1)
+    assert res.transfer_s > 0
+    assert res.total_s == res.compute_s + res.transfer_s
+    assert res.total_s > res.compute_s          # the transfer is in there
+    parts = sum(res.stage_s) + sum(h["encode_s"] + h["transfer_s"]
+                                   + h["decode_s"] for h in res.hops)
+    assert abs(parts - res.total_s) < 1e-12
+    assert abs(res.trace.dur - res.total_s) < 1e-9
+
+
 def test_multi_client_tail_batching(vgg_small, toy_data):
     model, params = vgg_small
     xs, _ = toy_data
