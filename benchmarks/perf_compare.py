@@ -111,6 +111,24 @@ GATE_SPECS = {
         ("overhead.null_pct", "lower", float("inf"), 1.0),
         ("overhead.record_pct", "lower", float("inf"), 5.0),
     ],
+    # the fault-tolerance layer.  Every gated metric is a deterministic
+    # replay of the seeded FaultPlan (fault counts, retries, backoff
+    # seconds, completion and fallback rates all live on the simulated
+    # clock), so they gate on the exact band; the zero-fault byte
+    # contract and 100% completion are *asserted* inside bench_faults
+    # itself and presence-checked here; the wall-clock recovery
+    # overhead is reported in the artifact, not gated
+    "faults": [
+        ("zero_fault.sei1_bit_identical", "higher", 0.001, None),
+        ("zero_fault.fused_bit_identical", "higher", 0.001, None),
+        ("chaos.completion_rate", "higher", 0.001, None),
+        ("chaos.retries", "lower", 0.001, None),
+        ("chaos.timeouts", "lower", 0.001, None),
+        ("chaos.downgrades", "lower", 0.001, None),
+        ("chaos.local_fallbacks", "lower", 0.001, None),
+        ("chaos.backoff_s", "lower", 0.001, None),
+        ("blackout.fallback_rate", "higher", 0.001, None),
+    ],
     # simulated pipeline numbers are deterministic (event engine +
     # analytic stage times), so they gate at the default tolerance; the
     # speedup must not collapse; the sim-vs-exec error divides by a

@@ -25,6 +25,7 @@ SECTIONS = {
     "megafleet": "benchmarks.bench_megafleet",
     "controller": "benchmarks.bench_controller",
     "obs": "benchmarks.bench_obs",
+    "faults": "benchmarks.bench_faults",
     "roofline": "benchmarks.roofline",
     # needs >=32 emulated devices; standalone: python -m benchmarks.bench_multipod_wire
     "multipod_wire": "benchmarks.bench_multipod_wire",

@@ -765,7 +765,7 @@ class Study:
 
     def deploy(self, candidate=None, *, device=None, serve: bool = False,
                n_slots: int = 4, quantize: bool = True, backend=None,
-               fused: bool = False):
+               fused: bool = False, faults=None, recovery=None):
         """Stage 5: a ready runtime for the chosen cut (or cut list).
 
         Returns a :class:`~repro.runtime.engine.SplitRuntime` executing
@@ -777,6 +777,13 @@ class Study:
         the suggestion (``'SC@2+5'`` / a cut tuple name multi-cut
         designs); ``device`` picks a fleet plan.  RC/LC designs have no
         cut to execute and raise with guidance.
+
+        ``faults`` (a :class:`~repro.runtime.faults.FaultPlan`) injects
+        the deterministic fault schedule into the returned runtime or
+        server; ``recovery`` (a
+        :class:`~repro.runtime.faults.RecoveryPolicy`) tunes the
+        retry/backoff/degradation machinery.  Both default to off — the
+        zero-fault fast path is untouched.
         """
         cand, hops = self._chosen_candidate(candidate, device)
         if cand.kind != "SC":
@@ -793,13 +800,15 @@ class Study:
             from repro.runtime.engine import TailServer
             from repro.runtime.partition import make_partition
             part = make_partition(self.model, self.params, splits, ae)
-            return TailServer(part, n_slots=n_slots)
+            return TailServer(part, n_slots=n_slots, faults=faults)
         from repro.runtime.engine import SplitRuntime
         if isinstance(hops, str):            # protocol over the study link
             return SplitRuntime(self.model, self.params, splits, ae=ae,
                                 channel=self.scenario.channel, protocol=hops,
                                 quantize=quantize, backend=backend,
-                                fused=fused, obs=self._recorder)
+                                fused=fused, obs=self._recorder,
+                                faults=faults, recovery=recovery)
         return SplitRuntime(self.model, self.params, splits, ae=ae,
                             channel=hops, quantize=quantize, backend=backend,
-                            fused=fused, obs=self._recorder)
+                            fused=fused, obs=self._recorder,
+                            faults=faults, recovery=recovery)

@@ -115,6 +115,7 @@ class ControllerConfig:
     warmup_s: float = 0.0            # new-plan offers clamped to t+warmup
     max_switches: int = 4            # hard cap on voluntary switches
     max_priced: int = 8              # shortlist size priced per replan
+    fault_trigger: Optional[int] = None   # runtime fault reports/window >=
 
 
 @dataclass
@@ -124,7 +125,7 @@ class SwitchRecord:
     t_s: float
     from_key: str
     to_key: str
-    reason: str                      # rate-drift|drops|queue|fault|replica-cap
+    reason: str     # rate-drift|drops|queue|fault|runtime-fault|replica-cap
     forced: bool = False
     predicted_p99_s: float = float("nan")   # priced p99 of the new plan
     incumbent_p99_s: float = float("nan")   # priced p99 of the old plan
@@ -262,6 +263,23 @@ class AdaptiveController:
         self._planner_epochs = None
         self._scheds: dict = {}
         self._mix: dict = {}
+        # runtime fault reports (t_s, n): the live runtime's recovery
+        # counters, consumed by the fault_trigger rescue rule
+        self._fault_reports: list = []
+
+    def report_faults(self, t_s: float, n: int = 1) -> None:
+        """Feed the controller the live runtime's fault counters (e.g.
+        ``RuntimeResult.meta["recovery"]["retries"]`` or a
+        ``runtime.fault.*`` telemetry sum) stamped at sim-time ``t_s``.
+        With ``config.fault_trigger`` set, ``>= fault_trigger`` reported
+        faults inside one control window trigger a replan (reason
+        ``"runtime-fault"``) — the runtime's degradation becomes a
+        rescue signal, not just a log line."""
+        if n > 0:
+            self._fault_reports.append((float(t_s), int(n)))
+
+    def _runtime_faults_between(self, t0: float, t1: float) -> int:
+        return sum(n for t, n in self._fault_reports if t0 < t <= t1)
 
     # ------------------------------------------------------ construction ----
     @classmethod
@@ -658,6 +676,10 @@ class AdaptiveController:
             trig = None
             if faults:
                 trig = "fault"
+            elif (cfg.fault_trigger is not None
+                    and self._runtime_faults_between(t_prev, t)
+                    >= cfg.fault_trigger):
+                trig = "runtime-fault"
             elif (cfg.drop_trigger is not None
                     and sig["drop_fraction"] > cfg.drop_trigger):
                 trig = "drops"

@@ -53,6 +53,7 @@ from repro.fleet.traffic import DeviceClass, Trace
 from repro.fleet.vectorized import simulate_cluster_vectorized
 from repro.netsim import analytic
 from repro.netsim.channel import Channel, compose_channels
+from repro.netsim.protocols import RetryBudgetExceeded
 from repro.netsim.simulator import (ApplicationSimulator, NetworkConfig,
                                     NetworkPath, measure_flow,
                                     simulate_pipeline)
@@ -357,6 +358,7 @@ def plan_tiers(model, params, topology: TierTopology, *,
     # screen price.  max_evals bounds the total event-engine calls.
     budget = max_evals if refine else 0
     t_refine0, n_refined, n_rounds = obs.tracer.wall_now(), 0, 0
+    n_infeasible = 0
     while refine and plans:
         shortlist = sorted(set(_pareto2_indices(plans))
                            | set(range(min(refine, len(plans)))))
@@ -378,9 +380,18 @@ def plan_tiers(model, params, topology: TierTopology, *,
         for i in todo:
             p = plans[i]
             path = NetworkPath(full_path.hops[:p.tier_index[-1]])
-            pipe = simulate_pipeline(list(p.stage_s), list(p.hop_bytes),
-                                     path, n_micro=n_micro,
-                                     check_closed_form=True)
+            try:
+                pipe = simulate_pipeline(list(p.stage_s), list(p.hop_bytes),
+                                         path, n_micro=n_micro,
+                                         check_closed_form=True)
+            except RetryBudgetExceeded:
+                # the event engine found a hop too lossy to deliver: the
+                # plan is infeasible (inf latency fails every QoS bar),
+                # the sweep continues
+                n_infeasible += 1
+                plans[i] = replace(p, latency_s=float("inf"),
+                                   sequential_s=float("inf"), refined=True)
+                continue
             n_eff, lat = n_micro, pipe.latency_s
             if pipe.sequential_s < lat:
                 n_eff, lat = 1, pipe.sequential_s
@@ -396,8 +407,11 @@ def plan_tiers(model, params, topology: TierTopology, *,
         obs.tracer.add("planner.refine", t_refine0, obs.tracer.wall_now(),
                        clock="wall", tid="planner", cat="planner",
                        args={"n_refined": n_refined, "rounds": n_rounds,
-                             "n_combos": len(plans)})
+                             "n_combos": len(plans),
+                             "n_infeasible": n_infeasible})
         obs.metrics.counter("planner.refined_plans").inc(n_refined)
+        if n_infeasible:
+            obs.metrics.counter("planner.infeasible_plans").inc(n_infeasible)
     return plans
 
 
@@ -499,6 +513,9 @@ class DeploymentPlanner:
         self.obs = NULL if obs is None else obs
         self._flow_cache = {}
         self._cost_cache = {}
+        # design points whose wire pricing blew the TCP retry budget
+        # (link infeasible at that loss rate): skipped, not crashed
+        self.n_infeasible_legs = 0
 
     # ------------------------------------------------------- candidates ----
     def candidates(self, space: SearchSpace) -> list[SplitCandidate]:
@@ -685,7 +702,17 @@ class DeploymentPlanner:
                         continue
                     if allowed is not None and (label, proto) not in allowed:
                         continue
-                    flow = self._flow(device, label, split, proto)
+                    try:
+                        flow = self._flow(device, label, split, proto)
+                    except RetryBudgetExceeded:
+                        # the link is too lossy to deliver this leg's
+                        # payload reliably: an infeasible design point,
+                        # not a planner crash — skip it and count it
+                        self.n_infeasible_legs += 1
+                        if obs.enabled:
+                            obs.metrics.counter(
+                                "planner.infeasible_legs").inc()
+                        continue
                     for b, r in itertools.product(space.batch_sizes,
                                                   space.replica_counts):
                         args = (device, sub, label, split, proto, flow,

@@ -1,5 +1,6 @@
 """Communication-aware discrete-event simulation (paper §IV)."""
 from .channel import Channel, INTERFACES, compose_channels  # noqa: F401
-from .protocols import simulate_transfer            # noqa: F401
+from .protocols import (RetryBudgetExceeded,        # noqa: F401
+                        simulate_transfer)
 from .simulator import (ApplicationSimulator, NetworkConfig,  # noqa: F401
                         NetworkPath, PipelineResult, simulate_pipeline)

@@ -24,6 +24,21 @@ MTU_BYTES = 1500
 TCP_WINDOW = 32
 
 
+class RetryBudgetExceeded(RuntimeError):
+    """A simulated TCP transfer gave up: some packet exceeded
+    ``max_rounds`` retransmissions (a link so lossy the transfer is
+    effectively infeasible).  Typed so planners can map the design point
+    to *infeasible* and keep sweeping instead of crashing."""
+
+    def __init__(self, packet: int, rounds: int, loss_rate: float):
+        super().__init__(
+            f"TCP retry budget exceeded: packet {packet} hit {rounds} "
+            f"rounds on a loss_rate={loss_rate} channel")
+        self.packet = packet
+        self.rounds = rounds
+        self.loss_rate = loss_rate
+
+
 @dataclass
 class TransferResult:
     duration_s: float                 # first-bit-sent -> last-byte-delivered
@@ -73,7 +88,8 @@ def simulate_tcp(n_bytes: int, ch: Channel, *, window: int = TCP_WINDOW,
             state["outstanding"].add(pkt)
             state["rounds"][pkt] += 1
             if state["rounds"][pkt] > max_rounds:
-                raise RuntimeError("TCP retry budget exceeded")
+                raise RetryBudgetExceeded(pkt, int(state["rounds"][pkt]),
+                                          ch.loss_rate)
             lost = rng.random() < ch.loss_rate
             if not lost:
                 q.schedule(state["link_free"] + ch.latency_s,

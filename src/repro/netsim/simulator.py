@@ -315,7 +315,10 @@ def measure_flow(scenario: Scenario, netcfg, model, params,
                                     netcfg.channel, stream=f, mtu=netcfg.mtu)
                   for f in range(n_frames)]
     return {**times, "frames": frames,
-            "wire_s": [t.duration_s for t in frames]}
+            "wire_s": [t.duration_s for t in frames],
+            # per-frame retransmit counts: what reliable delivery cost
+            # beyond the packet count (0 for UDP — it never resends)
+            "retries": [t.n_transmissions - t.n_packets for t in frames]}
 
 
 def _measure_path_flow(scenario: Scenario, path: NetworkPath, model, params,
@@ -361,8 +364,14 @@ def _measure_path_flow(scenario: Scenario, path: NetworkPath, model, params,
             "stage_s": list(stage_s), "hop_bytes": list(hop_bytes),
             "hop_frames": hop_frames,
             "hop_wire_s": [[t.duration_s for t in hf] for hf in hop_frames],
+            "hop_retries": [[t.n_transmissions - t.n_packets for t in hf]
+                            for hf in hop_frames],
             "frames": hop_frames[0] if hop_frames else [],
-            "wire_s": wire_s}
+            "wire_s": wire_s,
+            "retries": [sum(hop_frames[k][f].n_transmissions
+                            - hop_frames[k][f].n_packets
+                            for k in range(len(path)))
+                        for f in range(n_frames)]}
     if n_micro is not None:
         pipe = simulate_pipeline(stage_s, hop_bytes, path, n_micro=n_micro)
         flow["pipeline"] = pipe

@@ -8,6 +8,8 @@ measured ``CalibrationTable`` that ``measure_flow``/``DeploymentPlanner``
 from .calibrate import CalEntry, CalibrationTable, calibrate       # noqa: F401
 from .engine import (RuntimeResult, SplitRuntime, TailServer,      # noqa: F401
                      run_clients, timeit_blocked)
+from .faults import (FaultError, FaultPlan, RecoveryExhausted,     # noqa: F401
+                     RecoveryPolicy)
 from .partition import Partition, make_partition                   # noqa: F401
-from .wire import (WirePacket, decode_activation,                  # noqa: F401
+from .wire import (WireError, WirePacket, decode_activation,       # noqa: F401
                    encode_activation, from_bytes, to_bytes)

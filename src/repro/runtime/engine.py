@@ -28,6 +28,8 @@ from repro.netsim.channel import Channel
 from repro.netsim.protocols import simulate_transfer
 from repro.obs import NULL, Span, labelled
 from repro.runtime import wire as W
+from repro.runtime.faults import (FaultError, FaultPlan, RecoveryExhausted,
+                                  RecoveryPolicy, downgrade_ladder)
 from repro.runtime.partition import Partition, make_partition
 from repro.serving.continuous import SlotPool
 
@@ -120,9 +122,14 @@ def build_infer_spans(stage_s, hops, splits, *, base: float = 0.0,
                    + h["decode_s"], clock, tid, "runtime",
                    {"cut": h["cut"], "bytes": h["bytes"]})
         root.children.append(hop)
-        for part in ("encode", "transfer", "decode"):
-            d = h[f"{part}_s"]
-            hop.children.append(Span(part, t, t + d, clock, tid, "runtime"))
+        # recovery hops carry an event log (timeouts, backoffs, failed
+        # parses, re-encodes...); its bucket sums ARE encode_s/transfer_s/
+        # decode_s, so rendering per-event keeps the root reconciled
+        events = h.get("events") or [(part, part, h[f"{part}_s"])
+                                     for part in ("encode", "transfer",
+                                                  "decode")]
+        for name, _bucket, d in events:
+            hop.children.append(Span(name, t, t + d, clock, tid, "runtime"))
             t += d
     return root
 
@@ -156,13 +163,20 @@ class SplitRuntime:
                  ae: Optional[dict] = None,
                  channel=None, protocol: str = "tcp",
                  quantize: bool = True, backend: Optional[str] = None,
-                 fused: bool = False, obs=None):
+                 fused: bool = False, obs=None,
+                 faults: Optional[FaultPlan] = None,
+                 recovery: Optional[RecoveryPolicy] = None):
         self.part: Partition = make_partition(model, params, split_layer, ae)
         self.channel, self.protocol = channel, protocol
         self.quantize, self.backend = quantize, backend
         self.fused = fused
         self.hops = self._resolve_hops(channel, protocol)
         self.obs = NULL if obs is None else obs
+        # fault injection + recovery: only consulted when a plan is
+        # present — ``faults=None`` leaves the zero-fault fast path (and
+        # its SEI1 byte streams) completely untouched
+        self.faults = faults
+        self.recovery = recovery if recovery is not None else RecoveryPolicy()
 
     def _resolve_hops(self, channel, protocol) -> list:
         """Per-hop (protocol, channel) pairs; None entries skip pricing."""
@@ -204,8 +218,17 @@ class SplitRuntime:
         segments donate their boundary input, so a parse is single-use."""
         return W.parse_arrays(buf)
 
-    def infer(self, x, *, iters: int = 3, stream: int = 0) -> RuntimeResult:
-        """Timed stage -> wire -> stage ... execution of one input batch."""
+    def infer(self, x, *, iters: int = 3, stream: int = 0,
+              rid: int = 0) -> RuntimeResult:
+        """Timed stage -> wire -> stage ... execution of one input batch.
+
+        ``rid`` is the request id the fault plan keys its deterministic
+        draws on (ignored when no plan is installed).
+        """
+        if self.faults is not None:
+            logits, stage_s, hops, extra = self._run_recovering(
+                x, iters=iters, stream=stream, rid=rid)
+            return self._package(logits, stage_s, hops, extra)
         if self.fused:
             logits, stage_s, hops = self._run_fused(x, iters=iters,
                                                     stream=stream)
@@ -268,7 +291,223 @@ class SplitRuntime:
                          "decode_s": parse_s, **meta})
         return out, stage_s, hops
 
-    def _package(self, logits, stage_s, hops) -> RuntimeResult:
+    # ------------------------------------------------------- recovery ----
+    def _encode_rung(self, f, ae_k, kind: str) -> bytes:
+        """Encode the boundary activation at one degradation rung, as a
+        checksummed (SEI2) frame.  Rung 0 is the hop's nominal codec;
+        lower rungs re-encode locally from the same activation
+        (ae8 -> int8 -> f32), so a downgrade never needs a round-trip."""
+        if kind == "ae8":
+            pkt = W.encode_activation(f, ae_k, quantize=True,
+                                      backend=self.backend)
+        else:
+            pkt = W.encode_activation(f, None, quantize=(kind == "int8"),
+                                      backend=self.backend)
+        return W.to_bytes(pkt, checksum=True)
+
+    @staticmethod
+    def _payload_lo(buf: bytes) -> int:
+        """First payload byte of an SEI2 frame (corruption is aimed past
+        the header so detection falls on the CRC, not the magic)."""
+        return 6 + 4 * buf[5] + 8
+
+    def _run_stage_faulted(self, k: int, cur, *, iters, rid, plan,
+                           counts, rec):
+        """Stage k under injected stage exceptions: retry until the plan
+        stops faulting (bounded by ``max_consecutive``), charging one
+        stage execution per crashed attempt."""
+        attempt = 0
+        while True:
+            try:
+                if plan.stage_fault(rid, k, attempt):
+                    raise FaultError(
+                        f"injected fault in stage {k} (attempt {attempt})")
+                s, out = timeit_blocked(self.part.stage(k), cur, iters=iters)
+                break
+            except FaultError:
+                counts["stage"] += 1
+                rec["retries"] += 1
+                attempt += 1
+        # every crashed attempt ran the stage up to the fault: charge a
+        # full execution each so the accounting prices the retries
+        return s * (1 + attempt), out
+
+    def _recover_hop(self, k: int, cur, *, iters, stream, rid,
+                     counts, rec, t: float):
+        """Hop k under the fault plan: attempt loop with RTO-derived
+        timeouts, backoff, codec downgrade, and local-fallback
+        escalation.  Returns ``(boundary, hop_dict, t, fell_back)``."""
+        plan, pol = self.faults, self.recovery
+        cut = self.part.splits[k]
+        ae_k = self.part.ae_map.get(cut)
+        ladder = downgrade_ladder(W.wire_kind(ae_k, self.quantize))
+        ch_k = None if self.hops[k] is None else self.hops[k][1]
+        last_hop = k == len(self.part.splits) - 1
+        events, tmeta = [], {}
+        rung, corruptions, attempt = 0, 0, 0
+        fell_back = False
+
+        def encode(rung_kind):
+            return timeit_blocked(
+                lambda v: self._encode_rung(v, ae_k, rung_kind), cur,
+                iters=iters)
+
+        enc_s, buf = encode(ladder[rung])
+        events.append(("encode", "encode", enc_s))
+        t += enc_s
+        while True:
+            if attempt >= pol.max_attempts or (
+                    pol.deadline_s is not None and t >= pol.deadline_s):
+                # budget exhausted: degrade to running the rest locally
+                if not pol.local_fallback:
+                    raise RecoveryExhausted(
+                        f"hop {k}: {attempt} attempts, "
+                        f"t={t:.3f}s of budget {pol.deadline_s}")
+                rec["local_fallback"] = True
+                fell_back = True
+                break
+            fate = plan.transfer_fault(rid, k, attempt)
+            if last_hop and plan.blackout_at(t):
+                fate = "blackout"     # server leg is dark: attempt times out
+            if fate in ("drop", "blackout"):
+                counts[fate] += 1
+                lost_s = pol.timeout_s(ch_k, len(buf))
+                back = pol.backoff_s(attempt, seed=plan.seed, rid=rid,
+                                     hop=k, channel=ch_k)
+                events.append((f"{fate}-timeout", "transfer", lost_s))
+                events.append(("backoff", "transfer", back))
+                t += lost_s + back
+                rec["timeouts"] += 1
+                rec["backoff_s"] += back
+                rec["retries"] += 1
+                attempt += 1
+                continue
+            transfer_s, tmeta = self._price_hop(k, len(buf),
+                                                stream + 7919 * attempt)
+            if fate == "corrupt":
+                counts["corrupt"] += 1
+                events.append(("transfer", "transfer", transfer_s))
+                t += transfer_s
+                bad = plan.corrupt_bytes(buf, rid, k, attempt,
+                                         lo=self._payload_lo(buf))
+                try:
+                    W.from_bytes(bad)
+                    raise AssertionError(
+                        "corrupted SEI2 frame decoded cleanly")
+                except W.WireError as e:
+                    rec["log"].append(
+                        {"event": "corrupt", "hop": k, "attempt": attempt,
+                         "error": str(e)})
+                corruptions += 1
+                back = pol.backoff_s(attempt, seed=plan.seed, rid=rid,
+                                     hop=k, channel=ch_k)
+                events.append(("backoff", "transfer", back))
+                t += back
+                rec["backoff_s"] += back
+                rec["retries"] += 1
+                if corruptions >= pol.downgrade_after \
+                        and rung + 1 < len(ladder):
+                    rung += 1
+                    corruptions = 0
+                    rec["downgrades"].append(
+                        {"hop": k, "to": ladder[rung], "attempt": attempt})
+                    enc_s, buf = encode(ladder[rung])
+                    events.append(("re-encode", "encode", enc_s))
+                    t += enc_s
+                attempt += 1
+                continue
+            # delivered — possibly late (straggling tail server)
+            if fate == "straggle":
+                counts["straggle"] += 1
+                events.append(("straggle", "transfer", plan.straggle_s))
+                t += plan.straggle_s
+            events.append(("transfer", "transfer", transfer_s))
+            t += transfer_s
+            dec_s, cur = timeit_blocked(
+                lambda b, kk=ladder[rung]: W.decode_activation(
+                    W.from_bytes(b), ae_k if kk == "ae8" else None),
+                buf, iters=iters)
+            events.append(("decode", "decode", dec_s))
+            t += dec_s
+            break
+        hop = {"cut": cut, "bytes": len(buf),
+               "encode_s": sum(d for _, b, d in events if b == "encode"),
+               "transfer_s": sum(d for _, b, d in events if b == "transfer"),
+               "decode_s": sum(d for _, b, d in events if b == "decode"),
+               "attempts": attempt + (0 if fell_back else 1),
+               "kind": ladder[rung], "delivered": not fell_back,
+               "events": events, **tmeta}
+        return cur, hop, t, fell_back
+
+    def _run_recovering(self, x, *, iters: int, stream: int,
+                        rid: int) -> tuple:
+        """The faulted/recovery execution: the eager stage chain wrapped
+        in the retry/backoff/degradation machinery of
+        :class:`~repro.runtime.faults.RecoveryPolicy`.
+
+        Runs eagerly even under ``fused=True`` (recorded as
+        ``meta["recovery"]["exec"]``): codec downgrade re-encodes from
+        the raw boundary activation, which fused segments never expose —
+        and since fused==eager bit-identity is an enforced invariant,
+        outputs and payload bytes are identical either way.  Frames ship
+        as SEI2 (CRC32-checksummed), so corruption is detected, never
+        decoded; zero-fault runs (``faults=None``) never enter here.
+        """
+        plan = self.faults
+        counts = {"drop": 0, "corrupt": 0, "straggle": 0, "stage": 0,
+                  "blackout": 0}
+        rec = {"retries": 0, "timeouts": 0, "backoff_s": 0.0,
+               "downgrades": [], "local_fallback": False, "exec": "eager",
+               "log": []}
+        t = 0.0
+        cur = jnp.asarray(x)
+        stage_s, hops = [], []
+        for k in range(self.part.n_stages):
+            s, cur = self._run_stage_faulted(k, cur, iters=iters, rid=rid,
+                                             plan=plan, counts=counts,
+                                             rec=rec)
+            stage_s.append(s)
+            t += s
+            if k >= len(self.part.splits):
+                break
+            cur, hop, t, fell_back = self._recover_hop(
+                k, cur, iters=iters, stream=stream, rid=rid,
+                counts=counts, rec=rec, t=t)
+            hops.append(hop)
+            if fell_back:
+                # the server leg is unreachable within budget: the edge
+                # runs every remaining stage itself (codec skipped — the
+                # exact boundary activation feeds the next stage)
+                for j in range(k + 1, self.part.n_stages):
+                    s, cur = self._run_stage_faulted(
+                        j, cur, iters=iters, rid=rid, plan=plan,
+                        counts=counts, rec=rec)
+                    stage_s.append(s)
+                    t += s
+                break
+        rec["t_virtual_s"] = t
+        obs = self.obs
+        if obs.enabled:
+            now = obs.tracer.wall_now()
+            for name, v in counts.items():
+                if v:
+                    obs.metrics.counter(f"runtime.fault.{name}").inc(v)
+            obs.metrics.counter("runtime.retry.attempts").inc(rec["retries"])
+            obs.metrics.counter("runtime.retry.timeouts").inc(rec["timeouts"])
+            obs.metrics.counter("runtime.retry.backoff_s").inc(
+                rec["backoff_s"])
+            obs.metrics.counter("runtime.retry.downgrades").inc(
+                len(rec["downgrades"]))
+            if rec["local_fallback"]:
+                obs.metrics.counter("runtime.retry.local_fallback").inc()
+            obs.metrics.record("runtime.retry.t_virtual_s", now, t)
+        extra = {"degraded": bool(rec["downgrades"]) or rec["local_fallback"],
+                 "local_fallback": rec["local_fallback"],
+                 "recovery": {**rec, "faults": counts}}
+        return cur, stage_s, hops, extra
+
+    def _package(self, logits, stage_s, hops,
+                 extra_meta: Optional[dict] = None) -> RuntimeResult:
         result = RuntimeResult(
             np.asarray(logits), self.part.split_layer,
             stage_s[0],
@@ -278,7 +517,7 @@ class SplitRuntime:
             sum(stage_s[1:]),
             sum(h["bytes"] for h in hops),
             {**(dict(hops[0]) if len(hops) == 1 else {"hops": hops}),
-             "fused": self.fused},
+             "fused": self.fused, **(extra_meta or {})},
             splits=self.part.splits, stage_s=tuple(stage_s),
             hops=tuple(hops))
         obs = self.obs
@@ -325,7 +564,8 @@ class TailServer:
     """
 
     def __init__(self, part: Partition, *, n_slots: int = 4,
-                 client_batch: int = 1):
+                 client_batch: int = 1,
+                 faults: Optional[FaultPlan] = None):
         self.part = part
         self.pool = SlotPool(n_slots)
         self.queue: deque = deque()
@@ -334,15 +574,38 @@ class TailServer:
         self.n_batches = 0
         self.n_served = 0
         self.occupancy: list = []
+        # fault plan: integrity-check admissions, honour blackout windows
+        self.faults = faults
+        self.n_rejected = 0
+        self.rejected: list = []
+        self.n_blackout_steps = 0
 
-    def submit(self, client_id: int, payload: bytes, t: float = 0.0):
+    def submit(self, client_id: int, payload: bytes, t: float = 0.0) -> bool:
+        """Queue one wire payload.  With a fault plan installed the frame
+        is integrity-checked on admission (corrupted frames are rejected
+        and counted — the client's retry loop re-sends, the server never
+        decodes garbage).  Returns whether the request was accepted."""
+        if self.faults is not None:
+            try:
+                W.from_bytes(payload)
+            except W.WireError:
+                self.n_rejected += 1
+                self.rejected.append(client_id)
+                return False
         self.queue.append(TailRequest(client_id, payload, t))
+        return True
 
-    def step(self) -> dict:
+    def step(self, now: Optional[float] = None) -> dict:
         """Serve up to ``n_slots`` queued requests in one batched forward.
 
         Returns ``{client_id: logits}`` for the requests served this step.
+        ``now`` (a virtual-clock timestamp) lets a fault plan's blackout
+        windows apply: a step inside a window serves nothing.
         """
+        if (self.faults is not None and now is not None
+                and self.faults.blackout_at(now)):
+            self.n_blackout_steps += 1
+            return {}
         while self.queue and self.pool.free_slots():
             self.pool.admit(self.queue.popleft())
         active = self.pool.occupied()

@@ -27,11 +27,27 @@ The codec exists at two altitudes:
   int8 + scales output (one ``b"".join`` over buffer views, no
   intermediate numpy copies), and ``from_bytes`` parses into views over
   the received buffer.
+
+Two frame versions share one parser:
+
+* ``SEI1`` — the original header (magic | kind u8 | ndim u8 | dims
+  u32*).  The default everywhere; byte streams are bit-identical to
+  what earlier revisions shipped.
+* ``SEI2`` — the checksummed header (``checksum=True``): identical
+  layout plus two u32 CRC32s (data, scales) between the dims and the
+  payload, so in-flight corruption is *detected* — a typed
+  :class:`WireError`, never a garbage decode.  The fault-injection
+  runtime ships SEI2 on faulted paths only.
+
+Every malformed input — bad magic, unknown kind, truncation at any
+field boundary, CRC mismatch — raises :class:`WireError` (a
+``ValueError``) naming the offset it died at.
 """
 from __future__ import annotations
 
 import functools
 import struct
+import zlib
 from dataclasses import dataclass
 from typing import Optional
 
@@ -43,9 +59,17 @@ from repro.kernels.bottleneck_compress import bottleneck_compress_any
 from repro.kernels.bottleneck_decompress import bottleneck_decompress_any
 
 MAGIC = b"SEI1"
+MAGIC2 = b"SEI2"   # checksummed frames: dims are followed by 2 u32 CRC32s
 _KINDS = ("f32", "int8", "ae8")
 
 _KIND_DTYPE = {"f32": np.float32, "int8": np.int8, "ae8": np.int8}
+
+
+class WireError(ValueError):
+    """Malformed or corrupted wire bytes: bad magic, unknown kind,
+    truncation at a field boundary, or a CRC32 mismatch.  Subclasses
+    ``ValueError`` so pre-existing ``except ValueError`` sites keep
+    working; the message carries the offset where parsing failed."""
 
 
 def wire_kind(ae: Optional[dict], quantize: bool = True) -> str:
@@ -63,11 +87,14 @@ class WirePacket:
     shape: tuple                     # payload tensor shape (B, *spatial, L)
     data: np.ndarray                 # f32 (kind f32) or int8 codes
     scales: Optional[np.ndarray]     # f32 (N, 1) row scales (int8 kinds)
+    checksum: bool = False           # SEI2 frame (per-array CRC32s)
 
     @property
     def nbytes(self) -> int:
-        """Serialized size: header (6 + 4*ndim) + payload [+ scales]."""
-        n = 6 + 4 * len(self.shape) + self.data.nbytes
+        """Serialized size: header (6 + 4*ndim [+ 8 CRC]) + payload
+        [+ scales]."""
+        n = 6 + 4 * len(self.shape) + (8 if self.checksum else 0)
+        n += self.data.nbytes
         return n + (self.scales.nbytes if self.scales is not None else 0)
 
 
@@ -162,9 +189,13 @@ def _quantize_rows(f: jax.Array, scale: float = 127.0) -> tuple:
 
 
 # ----------------------------------------------------------- byte format ----
-def _header(kind: str, shape: tuple) -> bytes:
-    head = MAGIC + struct.pack("<BB", _KINDS.index(kind), len(shape))
-    return head + struct.pack(f"<{len(shape)}I", *shape)
+def _header(kind: str, shape: tuple, *, crcs: Optional[tuple] = None) -> bytes:
+    magic = MAGIC if crcs is None else MAGIC2
+    head = magic + struct.pack("<BB", _KINDS.index(kind), len(shape))
+    head += struct.pack(f"<{len(shape)}I", *shape)
+    if crcs is not None:
+        head += struct.pack("<II", *crcs)
+    return head
 
 
 def _buffer_view(a, dtype) -> memoryview:
@@ -176,7 +207,7 @@ def _buffer_view(a, dtype) -> memoryview:
     return memoryview(arr).cast("B", (arr.nbytes,))
 
 
-def frame_arrays(kind: str, data, scales=None) -> bytes:
+def frame_arrays(kind: str, data, scales=None, *, checksum: bool = False) -> bytes:
     """Zero-copy framing of the jitted path's wire tensors.
 
     Writes the self-describing header *around* the kernel's
@@ -185,17 +216,30 @@ def frame_arrays(kind: str, data, scales=None) -> bytes:
     detour.  ``to_bytes(encode_activation(f, ...))`` and
     ``frame_arrays(kind, *encode_arrays(f, ...))`` produce identical
     bytes.
+
+    ``checksum=True`` emits an SEI2 frame: two u32 CRC32s (data, scales
+    — 0 when there are no scales) follow the dims, so the receiver can
+    reject in-flight corruption.  The default stays SEI1, bit-identical
+    to the historical framing.
     """
-    parts = [_header(kind, tuple(data.shape)),
-             _buffer_view(data, _KIND_DTYPE[kind])]
-    if scales is not None:
-        parts.append(_buffer_view(scales, np.float32))
+    dview = _buffer_view(data, _KIND_DTYPE[kind])
+    sview = None if scales is None else _buffer_view(scales, np.float32)
+    crcs = None
+    if checksum:
+        crcs = (zlib.crc32(dview), 0 if sview is None else zlib.crc32(sview))
+    parts = [_header(kind, tuple(data.shape), crcs=crcs), dview]
+    if sview is not None:
+        parts.append(sview)
     return b"".join(parts)
 
 
-def to_bytes(pkt: WirePacket) -> bytes:
-    """Serialise: MAGIC | kind u8 | ndim u8 | dims u32* | payload [| scales]."""
-    return frame_arrays(pkt.kind, pkt.data, pkt.scales)
+def to_bytes(pkt: WirePacket, *, checksum: Optional[bool] = None) -> bytes:
+    """Serialise: MAGIC | kind u8 | ndim u8 | dims u32* [| crc u32 x2]
+    | payload [| scales].  ``checksum`` defaults to the packet's own
+    flag (``False`` for packets built by :func:`encode_activation`)."""
+    if checksum is None:
+        checksum = pkt.checksum
+    return frame_arrays(pkt.kind, pkt.data, pkt.scales, checksum=checksum)
 
 
 def parse_arrays(buf: bytes) -> tuple:
@@ -208,22 +252,52 @@ def parse_arrays(buf: bytes) -> tuple:
             None if pkt.scales is None else jnp.asarray(pkt.scales))
 
 
+def _need(buf, end: int, what: str, off: int):
+    if len(buf) < end:
+        raise WireError(
+            f"truncated frame: {what} at offset {off} needs {end} bytes, "
+            f"buffer has {len(buf)}")
+
+
 def from_bytes(buf: bytes) -> WirePacket:
-    if buf[:4] != MAGIC:
-        raise ValueError("not a split-wire payload (bad magic)")
+    """Parse one frame (either version).  Raises :class:`WireError` on
+    bad magic, unknown kind id, truncation at any field boundary, or —
+    for SEI2 frames — a per-array CRC32 mismatch."""
+    magic = bytes(buf[:4])
+    if magic not in (MAGIC, MAGIC2):
+        raise WireError("not a split-wire payload (bad magic)")
+    checksum = magic == MAGIC2
+    _need(buf, 6, "kind/ndim header", 4)
     kind_id, ndim = struct.unpack_from("<BB", buf, 4)
+    if kind_id >= len(_KINDS):
+        raise WireError(f"unknown wire kind id {kind_id} at offset 4")
     kind = _KINDS[kind_id]
+    _need(buf, 6 + 4 * ndim, f"{ndim} u32 dims", 6)
     shape = struct.unpack_from(f"<{ndim}I", buf, 6)
     off = 6 + 4 * ndim
-    n_elems = int(np.prod(shape))
+    crcs = None
+    if checksum:
+        _need(buf, off + 8, "CRC32 pair", off)
+        crcs = struct.unpack_from("<II", buf, off)
+        off += 8
+    n_elems = int(np.prod(shape, dtype=np.int64))
+    itemsize = np.dtype(_KIND_DTYPE[kind]).itemsize
+    _need(buf, off + n_elems * itemsize, f"{kind} payload", off)
+    data = np.frombuffer(buf, _KIND_DTYPE[kind], n_elems, off).reshape(shape)
+    if crcs is not None and zlib.crc32(buf[off:off + n_elems * itemsize]) \
+            != crcs[0]:
+        raise WireError(f"CRC mismatch in data array at offset {off}")
     if kind == "f32":
-        data = np.frombuffer(buf, np.float32, n_elems, off).reshape(shape)
-        return WirePacket(kind, shape, data, None)
-    data = np.frombuffer(buf, np.int8, n_elems, off).reshape(shape)
-    n_rows = n_elems // shape[-1] if ndim else 0
+        return WirePacket(kind, shape, data, None, checksum)
+    s_off = off + n_elems * itemsize
+    n_rows = n_elems // shape[-1] if ndim and shape[-1] else 0
+    _need(buf, s_off + 4 * n_rows, f"{n_rows} f32 row scales", s_off)
     scales = np.frombuffer(buf, np.float32, n_rows,
-                           off + n_elems).reshape(n_rows, 1)
-    return WirePacket(kind, shape, data, scales)
+                           s_off).reshape(n_rows, 1)
+    if crcs is not None and zlib.crc32(buf[s_off:s_off + 4 * n_rows]) \
+            != crcs[1]:
+        raise WireError(f"CRC mismatch in scales array at offset {s_off}")
+    return WirePacket(kind, shape, data, scales, checksum)
 
 
 # ----------------------------------------------------------- decode side ----

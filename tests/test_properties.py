@@ -309,3 +309,81 @@ def test_controller_with_triggers_disabled_is_exactly_static(rate, seed,
     assert np.array_equal(a.latencies, s.latencies)
     assert a.plan_keys == s.plan_keys == ("b8",)
     assert a.n_switches == 0 and a.n_replans == 0
+
+
+@settings(**SET)
+@given(b=st.integers(1, 4), rows=st.integers(1, 9), c=st.integers(1, 67),
+       kind=st.sampled_from(["f32", "int8", "ae8"]), seed=st.integers(0, 50))
+def test_checksummed_frames_preserve_zero_fault_bytes(b, rows, c, kind, seed):
+    """The SEI2 (checksummed) frame is the SEI1 frame with a new magic
+    and an 8-byte CRC pair spliced after the dims — the payload bytes
+    are untouched — and checksum=False stays the historical layout."""
+    from repro.core import bottleneck as B
+    from repro.runtime import wire as W
+    rng = np.random.default_rng(seed)
+    f = jnp.asarray(rng.standard_normal((b, rows, c)) * 3.0, jnp.float32)
+    ae = (B.init_bottleneck(jax.random.PRNGKey(seed), (c,), rate=0.5)
+          if kind == "ae8" else None)
+    pkt = W.encode_activation(f, ae, quantize=kind != "f32")
+    v1, v2 = W.to_bytes(pkt), W.to_bytes(pkt, checksum=True)
+    assert v1[:4] == b"SEI1" and v2[:4] == b"SEI2"
+    head = 6 + 4 * len(pkt.shape)
+    assert v1[4:head] == v2[4:head]          # kind + dims identical
+    assert v2[head + 8:] == v1[head:]        # payload bit-identical
+    back = W.from_bytes(v2)
+    np.testing.assert_array_equal(back.data, pkt.data)
+    np.testing.assert_array_equal(back.scales, pkt.scales)
+    out1 = np.asarray(W.decode_activation(W.from_bytes(v1), ae))
+    out2 = np.asarray(W.decode_activation(back, ae))
+    np.testing.assert_array_equal(out1, out2)
+
+
+@settings(**SET)
+@given(seed=st.integers(0, 1000), drop=st.floats(0, 1), corr=st.floats(0, 1),
+       strag=st.floats(0, 1), rid=st.integers(0, 40), hop=st.integers(0, 3))
+def test_fault_schedule_is_pure_function_of_seed(seed, drop, corr, strag,
+                                                 rid, hop):
+    """The injected fault schedule depends only on (seed, rid, hop,
+    attempt) — never on query order or instance identity — and every
+    burst ends within max_consecutive attempts."""
+    from repro.runtime.faults import TRANSFER_FAULTS, FaultPlan
+    kw = dict(seed=seed, drop_rate=drop, corrupt_rate=corr,
+              straggle_rate=strag, max_consecutive=5)
+    sched = FaultPlan(**kw).transfer_schedule(rid, hop, 8)
+    again = tuple(FaultPlan(**kw).transfer_fault(rid, hop, a)
+                  for a in reversed(range(8)))[::-1]
+    assert sched == again
+    assert all(f is None or f in TRANSFER_FAULTS for f in sched)
+    assert all(f is None for f in sched[5:])     # bounded burst
+
+
+@settings(deadline=None, max_examples=5)
+@given(seed=st.integers(0, 30), drop=st.floats(0.2, 0.7),
+       corr=st.floats(0.0, 0.4))
+def test_faulted_runtime_is_deterministic_and_fused_agrees(
+        vgg_small, toy_data, seed, drop, corr):
+    """Same FaultPlan seed ⇒ identical fault counts, retry/backoff
+    sequence and bit-identical logits across fresh runtimes and across
+    fused=True/False; retried (non-degraded) outputs equal fault-free."""
+    from repro.runtime.engine import SplitRuntime
+    from repro.runtime.faults import FaultPlan, RecoveryPolicy
+    model, params = vgg_small
+    x = jnp.asarray(toy_data[0][:2])
+    ch = Channel(1e-3, 100e6, 100e6, seed=0)
+    plan = FaultPlan(seed=seed, drop_rate=drop, corrupt_rate=corr)
+    pol = RecoveryPolicy(max_attempts=8)
+
+    def run(fused):
+        rt = SplitRuntime(model, params, 3, channel=ch, fused=fused,
+                          faults=plan, recovery=pol)
+        return rt.infer(x, iters=1, rid=seed)
+
+    a, b2, c2 = run(False), run(False), run(True)
+    np.testing.assert_array_equal(a.logits, b2.logits)
+    np.testing.assert_array_equal(a.logits, c2.logits)
+    for k in ("retries", "backoff_s", "downgrades", "faults"):
+        assert a.meta["recovery"][k] == b2.meta["recovery"][k]
+        assert a.meta["recovery"][k] == c2.meta["recovery"][k]
+    if not a.meta["degraded"]:
+        base = SplitRuntime(model, params, 3, channel=ch).infer(x, iters=1)
+        np.testing.assert_array_equal(a.logits, base.logits)
